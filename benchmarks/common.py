@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: timing + CSV rows."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (jax arrays blocked)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        us_s = f"{us:.2f}" if isinstance(us, (int, float)) else str(us)
+        print(f"{name},{us_s},{derived}")

@@ -1,0 +1,348 @@
+"""Paper-figure reproduction harnesses (Figs. 3, 6, 9–13, 16, 18, 19).
+
+Execution times on the UPMEM system come from the cycle cost model anchored
+on the paper's published constants (L_D, L_local — §VI-I); functional numbers
+(LUT sizes, exactness, engine wall time on CPU) are measured directly.
+Each function returns CSV rows ``(name, us_per_call, derived)``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import hw
+from repro.core import engine, luts, perfmodel, pim_cost
+from repro.core.pim_cost import GemmShape
+
+
+def _us(seconds: float) -> float:
+    return seconds * 1e6
+
+
+def fig3_candidates():
+    """§III-C: buffer-resident LUT vs DRAM-bank LUT, 512x512 GEMM, p=1..6."""
+    rows = []
+    s = GemmShape(512, 512, 512)
+    for p in range(1, 7):
+        td = pim_cost.dram_bank_lut_time(s, 1, 3, p)
+        tb = pim_cost.buffer_lut_time(s, 1, 3, p)
+        rows.append((f"fig3/dram_lut/p={p}", _us(td), f"buffer_wins={tb < td}"))
+        rows.append((f"fig3/buffer_lut/p={p}", _us(tb), f"speedup={td/tb:.2f}x"))
+    return rows
+
+
+def fig6_capacity():
+    """§IV-B Fig.6: LUT capacity vs p at W1A3; total reduction rate."""
+    rows = []
+    bw, ba = 1, 3
+    from repro.core.quantize import QuantSpec
+
+    wg, ag = QuantSpec(bw).grid(), QuantSpec(ba).grid()
+    for p in range(1, 9):
+        bo = luts.auto_bo(bw, ba, p, wg, ag)
+        packed = luts.packed_lut_bytes(bw, ba, p, bo)
+        canon = luts.canonical_lut_bytes(bw, ba, p, bo)
+        reorder = luts.reordering_lut_bytes(bw, p)
+        red = packed / (canon + reorder)
+        rows.append(
+            (f"fig6/p={p}", "", f"packed={packed};canonical={canon};"
+             f"reordering={reorder};reduction={red:.3g}x")
+        )
+    return rows
+
+
+_FIG9_SHAPES = [(768, 768, 128), (3072, 768, 128)]
+_FIG9_PREC = [(1, 3), (1, 4), (2, 2), (4, 4)]
+
+
+def fig9_gemm():
+    """§VI-B Fig.9: GEMM speedups of LoCaLUT vs baselines (model time)."""
+    rows = []
+    ratios = {k: [] for k in ("naive_pim", "ltc", "op")}
+    for m, k, n in _FIG9_SHAPES:
+        s = GemmShape(m, k, n)
+        for bw, ba in _FIG9_PREC:
+            t = {name: fn(s, bw, ba) for name, fn in pim_cost.METHODS.items()}
+            for base in ratios:
+                ratios[base].append(t[base] / t["localut"])
+            rows.append(
+                (f"fig9/({m},{k},{n})/W{bw}A{ba}", _us(t["localut"]),
+                 ";".join(f"vs_{b}={t[b]/t['localut']:.2f}x" for b in
+                          ("naive_pim", "ltc", "op", "op_lc", "op_lc_rc")))
+            )
+    for base, vals in ratios.items():
+        g = math.exp(sum(math.log(v) for v in vals) / len(vals))
+        paper = {"naive_pim": 2.87, "ltc": 1.77, "op": None}[base]
+        tgt = f";paper={paper}x;delta={abs(g-paper)/paper*100:.1f}%" if paper else ""
+        rows.append((f"fig9/geomean_vs_{base}", "", f"speedup={g:.2f}x{tgt}"))
+    return rows
+
+
+_MODELS = {
+    # layers, d_model, d_ff, seq  (paper §VI-A workloads, max len 128/197)
+    "bert": (12, 768, 3072, 128),
+    "opt": (12, 768, 3072, 128),
+    "vit": (12, 768, 3072, 197),
+}
+_MODEL_PREC = {
+    "bert": [(1, 3), (1, 4), (2, 2), (4, 4)],
+    "vit": [(2, 2), (4, 4)],
+    "opt": [(4, 4)],
+}
+
+
+def fig10_models():
+    """§VI-C Fig.10: end-to-end DNN model speedups (model time)."""
+    rows = []
+    ratios = {"naive_pim": [], "ltc": [], "op": []}
+    for name, (layers, d, ff, seq) in _MODELS.items():
+        for bw, ba in _MODEL_PREC[name]:
+            t = {
+                m: pim_cost.model_time(m, layers, d, ff, seq, bw, ba)
+                for m in ("naive_pim", "ltc", "op", "localut")
+            }
+            for b in ratios:
+                ratios[b].append(t[b] / t["localut"])
+            rows.append(
+                (f"fig10/{name}/W{bw}A{ba}", _us(t["localut"]),
+                 ";".join(f"vs_{b}={t[b]/t['localut']:.2f}x" for b in
+                          ("naive_pim", "ltc", "op")))
+            )
+    for b, vals in ratios.items():
+        g = math.exp(sum(math.log(v) for v in vals) / len(vals))
+        paper = {"naive_pim": 1.77, "ltc": 1.82, "op": 1.22}[b]
+        rows.append(
+            (f"fig10/geomean_vs_{b}", "",
+             f"speedup={g:.2f}x;paper={paper}x;delta={abs(g-paper)/paper*100:.1f}%")
+        )
+    return rows
+
+
+def fig11_size_sensitivity():
+    """§VI-D Fig.11: weight-matrix size sweep at N=32 (paper text: N=32)."""
+    rows = []
+    for bw, ba in [(1, 3), (2, 2)]:
+        sp = []
+        for mdim in (128, 256, 512, 1024):
+            s = GemmShape(mdim, mdim, 32)
+            t_n = pim_cost.naive_pim_time(s, bw, ba)
+            t_l = pim_cost.localut_time(s, bw, ba)
+            sp.append(t_n / t_l)
+            rows.append(
+                (f"fig11/W{bw}A{ba}/({mdim},{mdim})", _us(t_l),
+                 f"vs_naive={t_n/t_l:.2f}x")
+            )
+        g = math.exp(sum(math.log(v) for v in sp) / len(sp))
+        rows.append((f"fig11/W{bw}A{ba}/geomean", "", f"speedup={g:.2f}x;paper~2.86x"))
+    return rows
+
+
+def fig12_p_sensitivity():
+    """§VI-D Fig.12: p sweep at K=768, N=128, W2A2 for M in (192, 768, 3072)."""
+    rows = []
+    for m in (192, 768, 3072):
+        best_p, best_t = None, float("inf")
+        for p in range(1, 7):
+            t = pim_cost.localut_time_at_p(GemmShape(m, 768, 128), 2, 2, p)
+            if t < best_t:
+                best_p, best_t = p, t
+            rows.append((f"fig12/M={m}/p={p}", _us(t), ""))
+        rows.append((f"fig12/M={m}/best", _us(best_t), f"p*={best_p}"))
+    return rows
+
+
+def fig13_k_sensitivity():
+    """§VI-D Fig.13: slices-in-buffer (k) sweep.
+
+    Larger k amortizes per-streaming-batch overhead but eats buffer space,
+    forcing a lower p (paper: W2A2/W4A4 regress at k=4).  Modeled with the
+    buffer-budget p(k) and a per-batch fixed cost.
+    """
+    rows = []
+    dev = hw.UPMEM
+    from repro.core.quantize import QuantSpec
+
+    s = GemmShape(3072, 768, 128)
+    batch_overhead = 64 * dev.cycle            # DMA setup per slice batch
+    for bw, ba in [(1, 3), (1, 4), (2, 2), (4, 4)]:
+        wg, ag = QuantSpec(bw).grid(), QuantSpec(ba).grid()
+        t_by_k = {}
+        for k_sl in (1, 2, 4, 8):
+            # p(k): k slice-pairs + reordering slices must fit the buffer
+            p_fit = 0
+            for p in range(1, 9):
+                bo = luts.auto_bo(bw, ba, p, wg, ag)
+                rb = 1 if bw * p <= 8 else 2
+                if k_sl * (1 << (bw * p)) * (bo + rb) <= dev.buffer_lut_budget:
+                    p_fit = p
+            p_fit = max(p_fit, 1)
+            t = pim_cost.bank_tile(s, dev)
+            groups = math.ceil(t.k / p_fit)
+            slices = groups * t.n
+            stream = (1 << (bw * p_fit)) * slices * dev.l_d
+            batches = math.ceil(slices / k_sl)
+            lookup = t.m * groups * t.n * dev.l_local
+            total = stream + batches * batch_overhead + lookup
+            t_by_k[k_sl] = total
+            rows.append((f"fig13/W{bw}A{ba}/k={k_sl}", _us(total), f"p={p_fit}"))
+        best = min(t_by_k, key=t_by_k.get)
+        rows.append((f"fig13/W{bw}A{ba}/best_k", "", f"k={best}"))
+    return rows
+
+
+def fig16_breakdown():
+    """§VI-G Fig.16(b): GEMM kernel time breakdown (instruction shares)."""
+    dev = hw.UPMEM
+    # 12-instruction lookup body (paper §VI-I): canonical access, reordering
+    # access, index calculation, accumulate.
+    shares = {"canonical_lut_access": 2, "reordering_lut_access": 1,
+              "index_calc": 7, "accumulate": 2}
+    total = sum(shares.values())
+    rows = []
+    for name, insts in shares.items():
+        rows.append(
+            (f"fig16/{name}", _us(insts * dev.cycle),
+             f"share={insts/total*100:.1f}%")
+        )
+    rows.append(("fig16/reordering_access_share", "",
+                 f"{shares['reordering_lut_access']/total*100:.1f}%;paper=6.9%"))
+    rows.append(("fig16/index_calc_dominates", "",
+                 f"{shares['index_calc']/total*100:.1f}%;paper=dominant"))
+    return rows
+
+
+def fig18_costmodel():
+    """§VI-I Fig.18: model-predicted p* vs 'measured' optimum.
+
+    'Measured' here is the exact streamed engine run (slice counts, lookups)
+    converted to time with the same published constants — the validation is
+    that Eq.2/4's *shape* (which p wins, where streaming starts) matches the
+    explicit simulation, including the paper's own W2A2 (768,...) mispredict.
+    """
+    rows = []
+    for bw, ba in [(4, 4), (2, 2)]:
+        for m in (768, 3072):
+            plan = pim_cost.localut_plan(GemmShape(m, 768, 768), bw, ba)
+            # explicit per-p times
+            times = {
+                p: pim_cost.localut_time_at_p(GemmShape(m, 768, 768), bw, ba, p)
+                for p in range(1, plan.p_dram + 1)
+            }
+            best = min(times, key=times.get)
+            rows.append(
+                (f"fig18/W{bw}A{ba}/M={m}", _us(plan.t_predicted),
+                 f"model_p={plan.p_star};exhaustive_p={best};stream={plan.use_streaming}")
+            )
+    return rows
+
+
+def fig19_scenarios():
+    """§VI-J Fig.19: prefill vs decode phases + batch scaling."""
+    rows = []
+    layers, d, ff = 12, 768, 3072
+    # (a) prefill (seq tokens at once) vs decode (1 token) — BERT W1A3 / OPT W4A4
+    for name, (bw, ba), seq in [("bert_prefill", (1, 3), 128), ("opt_prefill", (4, 4), 128)]:
+        t_n = pim_cost.model_time("naive_pim", layers, d, ff, seq, bw, ba)
+        t_l = pim_cost.model_time("localut", layers, d, ff, seq, bw, ba)
+        rows.append((f"fig19/{name}", _us(t_l), f"speedup={t_n/t_l:.2f}x;paper~1.34x"))
+    t_n = pim_cost.model_time("naive_pim", layers, d, ff, 1, 4, 4)
+    t_l = pim_cost.model_time("localut", layers, d, ff, 1, 4, 4)
+    rows.append((f"fig19/opt_decode", _us(t_l), f"speedup={t_n/t_l:.2f}x;paper~1.27x"))
+    # (b) batch sweep
+    for b in (32, 64, 128, 256, 512):
+        s = GemmShape(3072, 768, b)
+        t_op = pim_cost.op_lut_time(s, 4, 4)
+        t_l = pim_cost.localut_time(s, 4, 4)
+        rows.append((f"fig19/batch={b}", _us(t_l), f"vs_op={t_op/t_l:.2f}x"))
+    return rows
+
+
+def functional_gemm_timing():
+    """Measured wall time of the exact LUT engines on CPU (functional layer)."""
+    from benchmarks.common import time_fn
+
+    rows = []
+    rng = np.random.default_rng(0)
+    pack = luts.build_lut_pack(1, 3, 4)
+    m, k, n = 96, 96, 16
+    wc = jnp.asarray(rng.integers(0, 2, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 8, (k, n)).astype(np.int32))
+    import jax
+
+    fn = jax.jit(lambda w, a: engine.canonical_lut_gemm(w, a, pack))
+    us = time_fn(fn, wc, ac)
+    rows.append((f"functional/canonical_gemm/({m},{k},{n})", us, "jnp, CPU, exact"))
+    ref = jax.jit(lambda w, a: engine.quantized_matmul_ref(w, a, pack.wgrid, pack.agrid))
+    us_ref = time_fn(ref, wc, ac)
+    rows.append((f"functional/int_matmul_ref/({m},{k},{n})", us_ref, "oracle"))
+    return rows
+
+
+def fig20_bank_level_pim():
+    """§VI-K Fig.20: LUT-based bank-level PIM vs 16-lane SIMD bank PIM.
+
+    Models the paper's Ramulator experiment: the SIMD design does 16 MACs per
+    bank-cycle; the LUT design replaces the SIMD unit with sixteen 512 B
+    canonical-LUT units (area-matched, §VI-K) doing 16 packed lookups per
+    cycle, each covering p MACs (p from the per-bank capacity budget of
+    16x512 B).  Paper: 2.04x geomean, 1.17x at W4A4.
+    """
+    rows = []
+    from repro.core.quantize import QuantSpec
+
+    lut_budget = 16 * 512
+    speedups = []
+    for bw, ba in [(1, 3), (2, 2), (4, 4)]:
+        wg, ag = QuantSpec(bw).grid(), QuantSpec(ba).grid()
+        p_fit = 1
+        for p in range(1, 9):
+            bo = luts.auto_bo(bw, ba, p, wg, ag)
+            if luts.canonical_lut_bytes(bw, ba, p, bo) + luts.reordering_lut_bytes(bw, p) <= lut_budget:
+                p_fit = p
+        for mkn in [(512, 512, 512), (2048, 2048, 512)]:
+            s = GemmShape(*mkn)
+            # per-bank-cycle throughput: SIMD = 16 MACs; LUT = 16 lookups * p
+            t_simd = s.m * s.k * s.n / 16.0
+            t_lut = s.m * s.k * s.n / (16.0 * p_fit)
+            speedups.append(t_simd / t_lut)
+            rows.append(
+                (f"fig20/W{bw}A{ba}/({mkn[0]},{mkn[1]},{mkn[2]})", "",
+                 f"p={p_fit};speedup={t_simd/t_lut:.2f}x")
+            )
+    g = math.exp(sum(math.log(v) for v in speedups) / len(speedups))
+    rows.append(("fig20/geomean", "", f"speedup={g:.2f}x;paper=2.04x"))
+    return rows
+
+
+def fig21_float_support():
+    """§VI-K Fig.21: floating-point LUTs via value-grid swap.
+
+    The LUT entry count depends only on bitwidth, not numeric format — the
+    same canonical/reordering machinery runs on fp grids.  Functional check
+    (fp LUT pack exact vs float dot) + capacity parity with the int grids.
+    """
+    rows = []
+    for bw, ba, p in [(1, 4, 3), (2, 3, 3), (4, 4, 2)]:
+        pk_int = luts.build_lut_pack(bw, ba, p)
+        pk_fp = luts.build_lut_pack(bw, ba, p, w_kind="fp", a_kind="fp")
+        rng = np.random.default_rng(0)
+        wc = rng.integers(0, 2**bw, (6, 3 * p))
+        ac = rng.integers(0, 2**ba, (3 * p, 4))
+        ref = pk_fp.wgrid[wc] @ pk_fp.agrid[ac]
+        idx = engine.canonicalize_activations(jnp.asarray(ac.astype(np.int32)), pk_fp)
+        import repro.core.packing as packing
+
+        wp = packing.pack_index(jnp.asarray(wc.astype(np.int32)).reshape(6, 3, p), bw)
+        wcanon = pk_fp.reordering[np.asarray(wp)[:, :, None], np.asarray(idx.permid)[None]]
+        vals = pk_fp.canonical[wcanon, np.asarray(idx.msrank)[None]]
+        err = float(np.max(np.abs(vals.sum(axis=1) - ref)))
+        rows.append(
+            (f"fig21/FP-W{bw}A{ba}/p={p}", "",
+             f"max_err={err:.2e};cols==int:{pk_fp.canonical.shape == pk_int.canonical.shape}")
+        )
+    rows.append(("fig21/format_flexibility", "",
+                 "same LUT shapes for int and fp grids (entry count = f(bits) only)"))
+    return rows

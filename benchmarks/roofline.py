@@ -1,0 +1,182 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape) cell.
+
+Reads the dry-run artifacts (``runs/dryrun/single/*.json``) and derives:
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / (links × link_bw)
+
+The compiled module is the per-chip SPMD program, so ``cost_analysis`` values
+are already per-chip; the *calibrated* numbers (scan-depth differencing, see
+launch/dryrun.py) are used when present — they equal the full-depth analysis
+when XLA accounts trip counts and correct it when it does not.
+
+MODEL_FLOPS uses 6·N·D for training and 2·N_active·D for inference steps
+(D = tokens processed in the step, divided over chips for the per-chip
+ratio); the MODEL/HLO ratio flags remat and redundant compute.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import hw
+from repro.configs import get_config
+from repro.launch.dryrun import RESULTS_DIR, SHAPES
+
+CHIP = hw.TPU_V5E
+N_CHIPS = 256  # single-pod roofline mesh
+
+
+def model_flops_per_chip(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    if sh["kind"] == "train":
+        tokens = sh["batch"] * sh["seq"]
+        total = 6.0 * cfg.active_param_count() * tokens  # MoE: routed-active only
+    elif sh["kind"] == "prefill":
+        tokens = sh["batch"] * sh["seq"]
+        total = 2.0 * cfg.active_param_count() * tokens
+    else:  # decode: one token per sequence
+        tokens = sh["batch"]
+        total = 2.0 * cfg.active_param_count() * tokens
+    return total / N_CHIPS
+
+
+def cell_terms(rec: dict) -> dict | None:
+    if rec.get("status") != "compiled":
+        return None
+    src = rec.get("calibrated") or rec.get("full_analysis") or {}
+    full = rec.get("full_analysis", {})
+    flops = float(src.get("flops", 0.0))
+    byts = float(src.get("bytes_accessed", 0.0))
+    coll = src.get("collective_bytes", {}) or {}
+    coll_b = sum(float(v) for v in coll.values())
+    t_comp = flops / CHIP.peak_flops_bf16
+    t_mem = byts / CHIP.hbm_bandwidth
+    t_coll = coll_b / (CHIP.ici_links * CHIP.ici_link_bandwidth)
+    dominant = max(
+        (("compute", t_comp), ("memory", t_mem), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops_per_chip(rec["arch"], rec["shape"])
+    bound = max(t_comp, t_mem, t_coll)
+    ideal_c = mf / CHIP.peak_flops_bf16
+    # Memory-roofline efficiency: a step must at minimum read its arguments
+    # and write its outputs once; actual HLO bytes above that are waste.
+    min_bytes = float(full.get("argument_size_in_bytes", 0)) + float(
+        full.get("output_size_in_bytes", 0)
+    )
+    ideal_m = min_bytes / CHIP.hbm_bandwidth
+    ideal = max(ideal_c, ideal_m)
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": flops,
+        "model_over_hlo": (mf / flops) if flops else 0.0,
+        "roofline_fraction": min((ideal / bound) if bound else 0.0, 1.0),
+        "mem_efficiency": min(min_bytes / byts, 1.0) if byts else 0.0,
+        "collective_detail": coll,
+        "min_bytes_per_chip": min_bytes,
+    }
+
+
+def load_cells(
+    results_dir: str = RESULTS_DIR, mesh: str = "single", *, variants: bool = False
+) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, mesh, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        is_variant = bool(rec.get("variant")) or (
+            not rec.get("quantized", True) and rec["shape"] != "train_4k"
+        )
+        if is_variant != variants:
+            continue
+        rec["terms"] = cell_terms(rec)
+        cells.append(rec)
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def rows(results_dir: str = RESULTS_DIR):
+    out = []
+    for rec in load_cells(results_dir):
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        if rec.get("status") == "skipped":
+            out.append((name, "", f"SKIP:{rec['skip_reason'][:60]}"))
+            continue
+        t = rec.get("terms")
+        if not t:
+            out.append((name, "", f"FAILED:{rec.get('error','')[:60]}"))
+            continue
+        out.append(
+            (name, f"{max(t['t_compute_s'], t['t_memory_s'], t['t_collective_s'])*1e6:.1f}",
+             f"comp={_fmt_s(t['t_compute_s'])};mem={_fmt_s(t['t_memory_s'])};"
+             f"coll={_fmt_s(t['t_collective_s'])};dom={t['dominant']};"
+             f"model/hlo={t['model_over_hlo']:.2f};roofline={t['roofline_fraction']*100:.1f}%;"
+             f"mem_eff={t['mem_efficiency']*100:.0f}%")
+        )
+    for rec in load_cells(results_dir, variants=True):
+        t = rec.get("terms")
+        tag = rec.get("variant") or "dense"
+        name = f"roofline-variant/{rec['arch']}/{rec['shape']}/{tag}"
+        if not t:
+            out.append((name, "", f"{rec.get('status')}"))
+            continue
+        out.append(
+            (name, f"{max(t['t_compute_s'], t['t_memory_s'], t['t_collective_s'])*1e6:.1f}",
+             f"comp={_fmt_s(t['t_compute_s'])};mem={_fmt_s(t['t_memory_s'])};"
+             f"coll={_fmt_s(t['t_collective_s'])};dom={t['dominant']}")
+        )
+    return out
+
+
+def markdown_table(results_dir: str = RESULTS_DIR) -> str:
+    lines = [
+        "| arch | shape | quant | compute | memory | collective | dominant |"
+        " MODEL/HLO | roofline frac | mem eff |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(results_dir):
+        q = "W4A4" if rec.get("quantized") else ("-" if rec["shape"] == "train_4k" else "bf16")
+        if rec.get("status") == "skipped":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | — | — | — | — |"
+                f" SKIP ({rec['skip_reason'].split(':')[0]}) |"
+            )
+            continue
+        t = rec.get("terms")
+        if not t:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | {q} | FAILED | | | | | | |")
+            continue
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {q} | {_fmt_s(t['t_compute_s'])} |"
+            f" {_fmt_s(t['t_memory_s'])} | {_fmt_s(t['t_collective_s'])} |"
+            f" {t['dominant']} | {t['model_over_hlo']:.2f} |"
+            f" {t['roofline_fraction']*100:.1f}% | {t['mem_efficiency']*100:.0f}% |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--markdown" in sys.argv:
+        print(markdown_table())
+    else:
+        from benchmarks.common import emit
+
+        emit(rows())

@@ -1,0 +1,59 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+Sections:
+  fig3   candidate LUT placements (§III-C)
+  fig6   LUT capacity vs packing degree (§IV-B)
+  fig9   GEMM speedups vs baselines (§VI-B)
+  fig10  end-to-end DNN models (§VI-C)
+  fig11  matrix-size sensitivity (§VI-D)
+  fig12  packing-degree sensitivity (§VI-D)
+  fig13  slice-count (k) sensitivity (§VI-D)
+  fig16  GEMM kernel breakdown (§VI-G)
+  fig18  cost-model validation (§VI-I)
+  fig19  prefill/decode + batch scenarios (§VI-J)
+  fig20  LUT-based bank-level PIM vs SIMD bank PIM (§VI-K)
+  fig21  floating-point support via value-grid swap (§VI-K)
+  functional  measured wall time of the exact LUT engines (CPU)
+  roofline    TPU v5e roofline terms per (arch × shape) from the dry-run
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks import paper_figs, roofline
+from benchmarks.common import emit
+
+SECTIONS = {
+    "fig3": paper_figs.fig3_candidates,
+    "fig6": paper_figs.fig6_capacity,
+    "fig9": paper_figs.fig9_gemm,
+    "fig10": paper_figs.fig10_models,
+    "fig11": paper_figs.fig11_size_sensitivity,
+    "fig12": paper_figs.fig12_p_sensitivity,
+    "fig13": paper_figs.fig13_k_sensitivity,
+    "fig16": paper_figs.fig16_breakdown,
+    "fig18": paper_figs.fig18_costmodel,
+    "fig19": paper_figs.fig19_scenarios,
+    "fig20": paper_figs.fig20_bank_level_pim,
+    "fig21": paper_figs.fig21_float_support,
+    "functional": paper_figs.functional_gemm_timing,
+    "roofline": roofline.rows,
+}
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, fn in SECTIONS.items():
+        if only and name != only:
+            continue
+        try:
+            emit(fn())
+        except Exception as e:  # pragma: no cover — keep the harness running
+            print(f"{name}/ERROR,,{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Demo: both Pallas TPU kernels, validated against their oracles.
+
+* ``lut_dequant_gemm`` — the TPU-optimized path: packed-code weights decoded
+  in-kernel through the value LUT, MXU matmul (interpret mode on CPU).
+* ``lut_stream_gemm`` — the paper-faithful slice-streaming path: canonical +
+  reordering LUT columns fetched HBM→VMEM by data-dependent scalar-prefetch
+  index maps, lookups executed as MXU one-hot contractions.
+
+Run:  PYTHONPATH=src python examples/lut_gemm_kernels.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api, engine, luts
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(0)
+
+# --- TPU-optimized packed-code GEMM -----------------------------------------
+B, K, F, bw = 8, 256, 128, 2
+w = jnp.asarray(rng.normal(size=(K, F)).astype(np.float32))
+x = jnp.asarray(rng.normal(size=(B, K)).astype(np.float32))
+spec = api.LutLinearSpec(bw=bw, ba=4)
+q = api.quantize_linear(w, spec)
+y = ops.lut_dequant_gemm(x, q.codes, q.scale, bw=bw, k=q.k)
+y_ref = ref.lut_dequant_gemm_ref(x, q.codes, q.scale, bw=bw, k=q.k,
+                                 grid=spec.wspec().grid())
+err = float(jnp.max(jnp.abs(y - y_ref)))
+print(f"lut_dequant_gemm [{B}x{K}x{F}] W{bw}: max err vs oracle = {err:.2e}")
+print(f"  HBM weight bytes: bf16 {K*F*2:,} -> packed {q.packed_bytes:,} "
+      f"({K*F*2/q.packed_bytes:.0f}x less traffic)")
+
+# --- paper-faithful slice streaming ------------------------------------------
+bw, ba, p = 1, 3, 4
+pack = luts.build_lut_pack(bw, ba, p)
+M, K2, N = 32, 64, 8
+wc = jnp.asarray(rng.integers(0, 2**bw, (M, K2)).astype(np.int32))
+ac = jnp.asarray(rng.integers(0, 2**ba, (K2, N)).astype(np.int32))
+out = ops.lut_stream_gemm_full(wc, ac, pack)
+want = engine.canonical_lut_gemm(wc, ac, pack)
+assert np.array_equal(np.asarray(out), np.asarray(want).astype(np.float32))
+print(f"lut_stream_gemm [{M}x{K2}x{N}] W{bw}A{ba} p={p}: bit-exact "
+      f"(canonical LUT {pack.canonical.shape}, reordering LUT {pack.reordering.shape})")
+print("kernel demo OK")

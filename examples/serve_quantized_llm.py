@@ -1,0 +1,44 @@
+"""End-to-end driver: serve a LoCaLUT-quantized LLM with batched requests.
+
+This is the paper-kind-appropriate end-to-end example (inference paper →
+serving driver): build a small GQA decoder, quantize every GEMM weight to
+packed W4A4 codes with the LoCaLUT transform, then serve a batch of prompts
+through prefill + greedy decode with a KV cache.
+
+Run:  PYTHONPATH=src python examples/serve_quantized_llm.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import LutLinearSpec
+from repro.models.model import build_model
+from repro.serve.serving import Request, ServeEngine
+
+cfg = get_config("stablelm-12b", smoke=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+dense_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+qparams = model.quantize(params, LutLinearSpec(bw=4, ba=4, mode="dequant"))
+quant_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(qparams))
+print(f"params: dense {dense_bytes:,} B -> LoCaLUT-packed {quant_bytes:,} B "
+      f"({dense_bytes/quant_bytes:.2f}x smaller)")
+
+eng = ServeEngine(model, qparams, batch=2, max_seq=48)
+rng = np.random.default_rng(0)
+requests = [
+    Request(prompt=rng.integers(0, cfg.vocab_size, 1 + i % 7).astype(np.int32),
+            max_new_tokens=8)
+    for i in range(6)
+]
+t0 = time.time()
+outputs = eng.generate(requests)
+dt = time.time() - t0
+print(f"served {len(requests)} ragged requests in {dt:.2f}s (incl. compile)")
+for i, out in enumerate(outputs):
+    print(f"  request {i} ({len(requests[i].prompt)} prompt tokens) -> {out}")
+print("serve example OK")

@@ -1,0 +1,54 @@
+"""Example: fault-tolerant training with injected failures.
+
+Trains a reduced chatglm3 on a learnable synthetic pattern while the failure
+injector kills the 'job' twice; the supervisor restores from the latest
+committed checkpoint each time and the loss trajectory continues exactly as
+if nothing happened (counter-based data pipeline = exact replay).
+
+Run:  PYTHONPATH=src python examples/train_fault_tolerant.py
+"""
+
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.ft import supervisor as sup
+from repro.models.model import build_model
+from repro.train import optimizer as opt
+from repro.train import train_step as ts
+
+CKPT = "runs/example_ft_ckpt"
+shutil.rmtree(CKPT, ignore_errors=True)
+
+cfg = get_config("chatglm3-6b", smoke=True)
+model = build_model(cfg)
+step = jax.jit(ts.make_train_step(model, opt.AdamWConfig(lr=2e-3), remat=False))
+
+
+def batch_at(i):
+    rng = np.random.default_rng(i)
+    start = rng.integers(0, cfg.vocab_size, (4, 1))
+    seq = (start + np.arange(17)[None]) % cfg.vocab_size
+    return {"tokens": jnp.asarray(seq.astype(np.int32))}
+
+
+losses = []
+state, restarts = sup.run_supervised(
+    cfg=sup.SupervisorConfig(ckpt_dir=CKPT, ckpt_every=5),
+    init_state_fn=lambda: ts.init_train_state(model, jax.random.PRNGKey(0)),
+    train_step_fn=step,
+    batch_at=batch_at,
+    n_steps=25,
+    injector=sup.FailureInjector(fail_at_steps=(8, 17)),
+    on_metrics=lambda s, m: (
+        losses.append(float(m["loss"])),
+        print(f"step {s:3d} loss {float(m['loss']):.4f}") if s % 5 == 0 else None,
+    ),
+)
+print(f"\nsurvived {restarts} injected failures; "
+      f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+assert restarts == 2 and losses[-1] < losses[0]
+print("fault-tolerant training example OK")

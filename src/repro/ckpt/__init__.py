@@ -1,0 +1,1 @@
+"""Checkpointing: sharded, mesh-independent save/restore with async writer."""

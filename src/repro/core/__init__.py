@@ -1,0 +1,23 @@
+"""LoCaLUT core: the paper's primary contribution as a composable JAX module.
+
+Layers (bottom-up):
+
+* :mod:`repro.core.quantize`  — low-bit symmetric quantization + value grids
+* :mod:`repro.core.packing`   — code packing / bit-packed weight storage
+* :mod:`repro.core.multiset`  — canonicalization math (multiset ranks, Lehmer ids)
+* :mod:`repro.core.luts`      — packed / canonical / reordering LUT builders
+* :mod:`repro.core.engine`    — exact LUT-GEMM execution engines
+* :mod:`repro.core.perfmodel` — paper Eq. 2–6 p*/streaming auto-selection
+* :mod:`repro.core.pim_cost`  — UPMEM cycle cost model (paper figures)
+* :mod:`repro.core.api`       — QuantizedLinear / apply_linear for the models
+"""
+
+from repro.core.api import (  # noqa: F401
+    LutLinearSpec,
+    QuantizedLinear,
+    apply_linear,
+    dequantize_weights,
+    quantize_linear,
+)
+from repro.core.luts import LutPack, build_lut_pack  # noqa: F401
+from repro.core.perfmodel import Plan, PlanInputs, make_plan  # noqa: F401

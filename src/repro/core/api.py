@@ -1,0 +1,161 @@
+"""Framework-facing LoCaLUT API: quantized linear layers.
+
+A :class:`QuantizedLinear` stores a weight matrix as **bit-packed low-bit
+codes** plus per-output-channel scales; three execution paths share it:
+
+* ``dequant``  — XLA path: value-LUT decode + MXU matmul (dense-equivalent
+                 numerics; used inside the large-scale models and the
+                 dry-run).  This is the TPU re-instantiation of the paper's
+                 capacity↔computation tradeoff: 16/bw× fewer weight bytes
+                 from HBM, paid for with decode flops.
+* ``lut``      — paper-faithful path: activation quantization → LUT
+                 canonicalization → reordering LUT → canonical-LUT lookups
+                 (bit-exact integer semantics, :mod:`repro.core.engine`).
+* ``pallas``   — fused TPU kernel (:mod:`repro.kernels`), same numerics as
+                 ``dequant``.
+
+Weight layout: codes are stored transposed ``[F, K]`` and bit-packed along
+``K`` (the contraction dim) so the decode in every path streams contiguous
+bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, luts, packing, perfmodel
+from repro.core.quantize import QuantSpec, quantize
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LutLinearSpec:
+    """Static configuration of a LoCaLUT-quantized linear layer."""
+
+    bw: int = 2
+    ba: int = 4
+    p: Optional[int] = None        # None -> perf-model auto-selection
+    mode: str = "dequant"          # "dequant" | "lut" | "pallas"
+    w_kind: str = "int"
+    a_kind: str = "int"
+
+    def wspec(self) -> QuantSpec:
+        return QuantSpec(self.bw, self.w_kind, axis=1)  # per-output-channel
+
+    def aspec(self) -> QuantSpec:
+        return QuantSpec(self.ba, self.a_kind, axis=None)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedLinear:
+    """Pytree carrying the packed weight of one linear layer."""
+
+    codes: Array                       # [F, K*bw/8] uint8, bit-packed codes
+    scale: Array                       # [F] fp32 per-output-channel scale
+    bias: Optional[Array]              # [F] or None
+    spec: LutLinearSpec = dataclasses.field(
+        metadata=dict(static=True), default=LutLinearSpec()
+    )
+    k: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def f(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def packed_bytes(self) -> int:
+        return int(np.prod(self.codes.shape))
+
+
+def quantize_linear(
+    w: Array, spec: LutLinearSpec, bias: Optional[Array] = None
+) -> QuantizedLinear:
+    """Quantize a dense ``[K, F]`` weight into a :class:`QuantizedLinear`."""
+    k, f = w.shape
+    codes, scale = quantize(w, spec.wspec())          # codes [K,F], scale [1,F]
+    codes_t = codes.T                                  # [F, K]
+    pad = (-k) % packing.codes_per_byte(spec.bw)
+    if pad:
+        # Pad K with the grid's zero-value code so decode-matmul is exact.
+        from repro.core.quantize import zero_code
+
+        zc = zero_code(spec.wspec().grid())
+        codes_t = jnp.pad(codes_t, ((0, 0), (0, pad)), constant_values=zc)
+    packed = packing.pack_bits(codes_t, spec.bw)       # [F, ceil(K/cpb)]
+    return QuantizedLinear(
+        codes=packed, scale=scale.reshape(f), bias=bias, spec=spec, k=k
+    )
+
+
+def dequantize_weights(q: QuantizedLinear) -> Array:
+    """Value-LUT decode back to a dense ``[K, F]`` float32 weight."""
+    spec = q.spec
+    grid = jnp.asarray(spec.wspec().grid(), dtype=jnp.float32)
+    codes = packing.unpack_bits(q.codes, spec.bw)[:, : q.k]   # [F, K]
+    w_t = grid[codes] * q.scale[:, None]
+    return w_t.T
+
+
+def apply_linear(q: QuantizedLinear, x: Array, *, interpret: bool = True) -> Array:
+    """``y = x @ W (+ bias)`` through the path selected by ``q.spec.mode``.
+
+    ``x``: [..., K] activations; returns [..., F].
+    """
+    mode = q.spec.mode
+    if mode == "dequant":
+        y = _dequant_matmul(q, x)
+    elif mode == "lut":
+        y = _lut_matmul(q, x)
+    elif mode == "pallas":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        y = ops.lut_dequant_gemm(
+            x.reshape(-1, x.shape[-1]),
+            q.codes,
+            q.scale,
+            bw=q.spec.bw,
+            k=q.k,
+            grid_kind=q.spec.w_kind,
+            interpret=interpret,
+        ).reshape(x.shape[:-1] + (q.f,))
+    else:
+        raise ValueError(f"unknown mode {mode}")
+    if q.bias is not None:
+        y = y + q.bias.astype(y.dtype)
+    return y
+
+
+def _dequant_matmul(q: QuantizedLinear, x: Array) -> Array:
+    spec = q.spec
+    grid = jnp.asarray(spec.wspec().grid(), dtype=x.dtype)
+    codes = packing.unpack_bits(q.codes, spec.bw)[:, : q.k]        # [F, K]
+    w_t = grid[codes] * q.scale[:, None].astype(x.dtype)           # [F, K]
+    return jnp.einsum("...k,fk->...f", x, w_t)
+
+
+def _lut_matmul(q: QuantizedLinear, x: Array) -> Array:
+    """Paper-faithful path: canonical + reordering LUT engine (bit-exact)."""
+    spec = q.spec
+    xf = x.reshape(-1, x.shape[-1])                                 # [B, K]
+    acodes, ascale = quantize(xf.T, spec.aspec())                   # [K, B]
+    wcodes = packing.unpack_bits(q.codes, spec.bw)[:, : q.k]        # [F, K]
+    p = spec.p or perfmodel.make_plan(
+        perfmodel.PlanInputs(m=q.f, k=q.k, n=xf.shape[0], bw=spec.bw, ba=spec.ba)
+    ).p_star
+    pack = _lut_pack_cache(spec.bw, spec.ba, p, spec.w_kind, spec.a_kind)
+    o = engine.canonical_lut_gemm(wcodes, acodes, pack)             # [F, B] int32
+    y = o.astype(jnp.float32) * q.scale[:, None] * ascale
+    return y.T.reshape(x.shape[:-1] + (q.f,)).astype(x.dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _lut_pack_cache(bw: int, ba: int, p: int, w_kind: str, a_kind: str):
+    return luts.build_lut_pack(bw, ba, p, w_kind=w_kind, a_kind=a_kind)

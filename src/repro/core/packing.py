@@ -1,0 +1,91 @@
+"""Packing ``p`` b-bit codes into a single integer index (and bit-packing
+weight codes into dense uint8 words for the bandwidth-optimized TPU path).
+
+Conventions (shared by every LUT builder and engine in this repo):
+
+* A *packed index* of a length-``p`` code vector ``c`` is
+  ``sum_j c[j] << (bits * j)`` — element 0 occupies the least-significant
+  bits.
+* Bit-packed *storage* (``pack_bits``/``unpack_bits``) is little-endian
+  within each uint8 byte: code 0 of a byte sits in bits [0, bw).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def pack_index(codes, bits: int):
+    """[..., p] int codes -> [...] packed integer index (int32)."""
+    codes = jnp.asarray(codes)
+    p = codes.shape[-1]
+    if bits * p > 31:
+        raise ValueError(f"packed index needs {bits*p} bits; int32 limit exceeded")
+    shifts = (jnp.arange(p, dtype=jnp.int32) * bits).astype(jnp.int32)
+    return jnp.sum(codes.astype(jnp.int32) << shifts, axis=-1)
+
+
+def unpack_index(idx, bits: int, p: int):
+    """[...] packed index -> [..., p] int32 codes."""
+    idx = jnp.asarray(idx)[..., None]
+    shifts = (jnp.arange(p, dtype=jnp.int32) * bits).astype(jnp.int32)
+    mask = (1 << bits) - 1
+    return (idx >> shifts) & mask
+
+
+def pack_index_np(codes: np.ndarray, bits: int) -> np.ndarray:
+    p = codes.shape[-1]
+    shifts = np.arange(p, dtype=np.int64) * bits
+    return np.sum(codes.astype(np.int64) << shifts, axis=-1).astype(np.int64)
+
+
+def unpack_index_np(idx: np.ndarray, bits: int, p: int) -> np.ndarray:
+    shifts = np.arange(p, dtype=np.int64) * bits
+    mask = (1 << bits) - 1
+    return ((np.asarray(idx, dtype=np.int64)[..., None] >> shifts) & mask).astype(
+        np.int32
+    )
+
+
+def all_code_vectors(bits: int, p: int) -> np.ndarray:
+    """[2^(bits*p), p] — the code vector of every packed index (row i = unpack(i))."""
+    n = 1 << (bits * p)
+    return unpack_index_np(np.arange(n), bits, p)
+
+
+# ---------------------------------------------------------------------------
+# Dense bit-packed storage for quantized weights (TPU bandwidth path).
+# ---------------------------------------------------------------------------
+
+
+def codes_per_byte(bits: int) -> int:
+    if bits not in (1, 2, 4, 8):
+        raise ValueError(f"bit-packed storage supports bw in (1,2,4,8), got {bits}")
+    return 8 // bits
+
+
+def pack_bits(codes, bits: int):
+    """[..., K] int codes (< 2^bits) -> [..., K*bits/8] uint8 storage."""
+    codes = jnp.asarray(codes)
+    cpb = codes_per_byte(bits)
+    k = codes.shape[-1]
+    if k % cpb:
+        raise ValueError(f"last dim {k} not a multiple of {cpb}")
+    grouped = codes.reshape(codes.shape[:-1] + (k // cpb, cpb))
+    shifts = (jnp.arange(cpb, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    # Codes occupy disjoint bit ranges, so sum == bitwise-or.
+    return jnp.sum(grouped.astype(jnp.uint32) << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack_bits(packed, bits: int):
+    """[..., B] uint8 -> [..., B*8/bits] int32 codes."""
+    packed = jnp.asarray(packed)
+    cpb = codes_per_byte(bits)
+    shifts = (jnp.arange(cpb, dtype=jnp.int32) * bits).astype(jnp.int32)
+    mask = (1 << bits) - 1
+    out = (packed[..., None].astype(jnp.int32) >> shifts) & mask
+    return out.reshape(packed.shape[:-1] + (packed.shape[-1] * cpb,))

@@ -1,0 +1,140 @@
+"""Low-bit symmetric quantization and *value LUTs* (code -> value grids).
+
+The paper treats quantized numbers as *symbols*: LUT contents, not hardware,
+define the numeric format (§VII-A, §VIII).  We mirror that: a value grid is a
+``2**bits``-entry table mapping codes to representable values.  Integer grids
+are used for the paper's WxAy settings; arbitrary float grids (fp4/nf4-style)
+demonstrate the format flexibility the paper argues for (§VI-K floating
+point support).
+
+Quantization is symmetric with a per-channel (or per-tensor) scale:
+``x ≈ scale * grid[code]``.  All LUT-GEMM engines are *bit-exact* on the
+integer grids: they compute ``sum(grid_w[wc] * grid_a[ac])`` in int32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def int_grid(bits: int) -> np.ndarray:
+    """Signed integer value grid for ``bits``-bit codes.
+
+    * 1 bit: binary {-1, +1} (BinaryBERT-style, paper's W1 settings).
+    * b >= 2: *symmetric* range ``-(2^(b-1)-1) .. 2^(b-1)-1`` (code - 2^(b-1)
+      clipped; code 0 duplicates -max).  Symmetry matters: it bounds the
+      packed partial product by ``p * (2^(bw-1)-1) * (2^(ba-1)-1)`` which sets
+      the paper's ``b_o`` — with it, the capacity limits reproduce §V-A
+      (W1A3: p_local=5 / p_dram=8) and §VI-I (W4A4: p_local=2) exactly.
+      W2 becomes ternary {-1, 0, +1}, consistent with the paper's
+      TernaryBERT-style W2 settings.
+    """
+    if bits < 1:
+        raise ValueError(f"bits must be >= 1, got {bits}")
+    if bits == 1:
+        return np.array([-1, 1], dtype=np.int32)
+    lim = 2 ** (bits - 1) - 1
+    return np.clip(np.arange(2**bits) - 2 ** (bits - 1), -lim, lim).astype(np.int32)
+
+
+def uint_grid(bits: int) -> np.ndarray:
+    """Unsigned integer grid 0..2^b-1 (used for activations after ReLU etc.)."""
+    return np.arange(2**bits, dtype=np.int32)
+
+
+def fp_grid(bits: int) -> np.ndarray:
+    """A small floating-point-ish grid (e4m3-inspired spacing) for `bits` codes.
+
+    Demonstrates the paper's format-flexibility claim: the same LUT machinery
+    runs unmodified on non-uniform grids (§VI-K "Support for floating points").
+    """
+    n = 2**bits
+    half = n // 2
+    # log-spaced magnitudes plus zero; symmetric.
+    mags = np.concatenate([[0.0], np.logspace(-2, 0, half - 1)])
+    grid = np.concatenate([-mags[::-1][:-1], mags])
+    assert grid.shape[0] in (n, n - 1)
+    if grid.shape[0] == n - 1:  # pad with max
+        grid = np.concatenate([grid, [mags[-1] * 1.5]])
+    return np.sort(grid).astype(np.float32)
+
+
+def zero_code(grid: np.ndarray) -> int:
+    """Code whose value is closest to 0 (used for padding partial groups)."""
+    return int(np.argmin(np.abs(np.asarray(grid))))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How to quantize one tensor."""
+
+    bits: int
+    grid_kind: str = "int"  # "int" | "uint" | "fp"
+    axis: Optional[int] = None  # scale axis; None = per-tensor
+
+    def grid(self) -> np.ndarray:
+        if self.grid_kind == "int":
+            return int_grid(self.bits)
+        if self.grid_kind == "uint":
+            return uint_grid(self.bits)
+        if self.grid_kind == "fp":
+            return fp_grid(self.bits)
+        raise ValueError(f"unknown grid kind {self.grid_kind}")
+
+    @property
+    def n_codes(self) -> int:
+        return 2**self.bits
+
+
+def quantize(
+    x: Array, spec: QuantSpec, *, scale: Optional[Array] = None
+) -> tuple[Array, Array]:
+    """Quantize ``x`` to codes under ``spec``; returns ``(codes, scale)``.
+
+    ``codes`` are int32 in ``[0, 2^bits)``; ``x ≈ scale * grid[codes]`` with
+    broadcasting along ``spec.axis``.
+    """
+    grid = jnp.asarray(spec.grid(), dtype=jnp.float32)
+    gmax = float(np.max(np.abs(spec.grid())))
+    if gmax == 0:
+        raise ValueError("degenerate grid")
+    if scale is None:
+        if spec.axis is None:
+            amax = jnp.max(jnp.abs(x))
+        else:
+            reduce_axes = tuple(i for i in range(x.ndim) if i != spec.axis % x.ndim)
+            amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+        scale = jnp.maximum(amax, 1e-12) / gmax
+    scaled = x / scale
+    # Nearest grid point.  Uniform int grids admit a round; generic grids use
+    # a (tiny) argmin over the table — still just 2^bits comparisons.
+    if spec.grid_kind in ("int", "uint") and spec.bits > 1:
+        g = spec.grid()
+        lo, hi = float(g.min()), float(g.max())
+        # Map value v -> code c with grid[c] == v.  The clipped symmetric grid
+        # duplicates -max at code 0, so anchor on the *last* index holding lo.
+        off = int(np.nonzero(g == g.min())[0][-1]) - int(g.min())
+        codes = jnp.clip(jnp.round(scaled), lo, hi) + off
+        codes = codes.astype(jnp.int32)
+    else:
+        dist = jnp.abs(scaled[..., None] - grid)
+        codes = jnp.argmin(dist, axis=-1).astype(jnp.int32)
+    return codes, scale
+
+
+def dequantize(codes: Array, scale: Array, spec: QuantSpec) -> Array:
+    grid = jnp.asarray(spec.grid(), dtype=jnp.float32)
+    return grid[codes] * scale
+
+
+def fake_quant(x: Array, spec: QuantSpec) -> Array:
+    """Quantize-dequantize (used for accuracy-style comparisons)."""
+    codes, scale = quantize(x, spec)
+    return dequantize(codes, scale, spec)

@@ -1,0 +1,1 @@
+"""Data pipeline: deterministic synthetic token streams with host prefetch."""

@@ -1,0 +1,23 @@
+"""Trace-time feature flags.
+
+``REPRO_COST_UNROLL=1`` makes the structural scans (layer stack, chunked
+attention, chunked xent) fully unroll at trace time.  Used ONLY by the
+dry-run's cost-calibration variants (2–3 units deep): XLA's HLO cost analysis
+counts a rolled ``while`` body once, so unrolled variants + depth differencing
+give exact per-unit FLOPs/bytes/collectives regardless of backend loop
+handling.  SSM/RWKV token recurrences stay rolled even in cost mode: their
+per-step flops are <1% of the projections, and their per-step state traffic
+lives in VMEM on the target hardware, so counting it as HBM bytes would be
+wrong anyway (see EXPERIMENTS.md §Dry-run methodology).
+"""
+
+import os
+
+
+def cost_unroll() -> bool:
+    return os.environ.get("REPRO_COST_UNROLL", "0") == "1"
+
+
+def scan_unroll():
+    """Value for lax.scan(unroll=...) at structural scan sites."""
+    return True if cost_unroll() else 1

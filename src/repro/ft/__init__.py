@@ -1,0 +1,1 @@
+"""Fault tolerance: restart supervisor, failure injection, elastic re-mesh."""

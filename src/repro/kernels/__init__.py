@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for LoCaLUT's compute hot-spots.
+
+* :mod:`repro.kernels.lut_dequant_gemm` — TPU-optimized packed-code GEMM
+  (value-LUT decode in VMEM + MXU matmul; the bandwidth↔computation
+  re-instantiation of the paper's tradeoff).
+* :mod:`repro.kernels.lut_stream_gemm` — paper-faithful canonical-LUT slice
+  streaming (scalar-prefetched data-dependent column fetch HBM→VMEM,
+  LUT-stationary reuse, lookups as MXU one-hot contractions).
+* :mod:`repro.kernels.flash_attention` — online-softmax attention (scores
+  never leave VMEM; the structural fix for the prefill memory roofline).
+* :mod:`repro.kernels.ops` — jitted wrappers / host-side preparation.
+* :mod:`repro.kernels.ref` — pure-jnp oracles (the ground truth for tests).
+
+Kernels are authored for TPU (BlockSpec VMEM tiling, MXU-aligned shapes) and
+validated on CPU with ``interpret=True``.
+"""

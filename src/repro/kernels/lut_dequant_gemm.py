@@ -1,0 +1,131 @@
+"""TPU Pallas kernel: packed low-bit-code GEMM with in-kernel value-LUT decode.
+
+This is LoCaLUT's capacity↔computation tradeoff re-instantiated for the TPU
+memory hierarchy (DESIGN.md §2.1): weights live in HBM as bit-packed ``bw``-bit
+codes (16/bw× fewer bytes than bf16) and are decoded *inside* the kernel
+through a tiny value LUT — the code→value table that defines the numeric
+format, exactly the paper's format-flexibility argument.  The MXU supplies the
+"free" arithmetic that the DRAM-PIM design had to buy with LUT capacity.
+
+Dataflow per grid step (i, j, kk):
+
+    HBM ──codes tile [bF, bKc] (uint8)──▶ VMEM      (Pallas double-buffers)
+    VMEM: decode = Σ_c grid[c]·(codes==c)  — a 2^bw-term one-hot contraction,
+          i.e. the *lookup performed as compute* (VPU), no gather
+    MXU : acc[bB, bF] += x[bB, bK] @ w_t[bF, bK]^T
+    last kk: out = acc * scale[bF]
+
+The K (contraction) axis is the innermost grid dimension; the f32 accumulator
+lives in the revisited output block.  Block shapes keep the MXU dims at
+multiples of 128 and the decoded tile entirely in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# Default tile sizes (MXU-aligned; VMEM footprint per step ≈
+# bB*bK*4 + bF*bK*(1+4) + bB*bF*4 ≈ 1.8 MB at 128/512/256 — far below VMEM).
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_F = 256
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel_body(
+    x_ref, codes_ref, scale_ref, out_ref, *, bw: int, grid_values: tuple, nk: int
+):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[...]                         # [bF, bKc] uint8
+    cpb = 8 // bw
+    mask = (1 << bw) - 1
+    # Unpack: [bF, bKc] -> [bF, bKc, cpb] -> [bF, bK]
+    shifts = (jnp.arange(cpb, dtype=jnp.int32) * bw).astype(jnp.int32)
+    unpacked = (codes[..., None].astype(jnp.int32) >> shifts) & mask
+    unpacked = unpacked.reshape(codes.shape[0], codes.shape[1] * cpb)
+    # Value-LUT decode as a one-hot contraction (lookup-as-compute).
+    w_t = jnp.zeros(unpacked.shape, dtype=jnp.float32)
+    for c, v in enumerate(grid_values):
+        w_t += jnp.float32(v) * (unpacked == c).astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)             # [bB, bK]
+    acc = jax.lax.dot_general(
+        x,
+        w_t,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                               # [bB, bF]
+    out_ref[...] += acc
+
+    @pl.when(kk == nk - 1)
+    def _scale():
+        out_ref[...] = out_ref[...] * scale_ref[...][None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bw", "k", "grid_values", "block_b", "block_f", "block_k", "interpret"),
+)
+def lut_dequant_gemm(
+    x: Array,
+    codes: Array,
+    scale: Array,
+    *,
+    bw: int,
+    k: int,
+    grid_values: tuple,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_f: int = DEFAULT_BLOCK_F,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> Array:
+    """``y[B,F] = x[B,K] @ (grid[codes] * scale)[F,K]^T``.
+
+    ``codes`` is the bit-packed ``[F, ceil(K/cpb)]`` uint8 weight storage of a
+    :class:`repro.core.api.QuantizedLinear`.  Padding to block multiples is
+    handled here; the caller passes logical sizes.
+    """
+    b, k_in = x.shape
+    f = codes.shape[0]
+    cpb = 8 // bw
+    assert k_in == k
+
+    block_k = min(block_k, max(cpb, 1 << (k - 1).bit_length()))
+    block_k = max(block_k - block_k % cpb, cpb)
+    block_b = min(block_b, max(8, 1 << (b - 1).bit_length()))
+    block_f = min(block_f, max(8, 1 << (f - 1).bit_length()))
+
+    pb, pf, pk = (-b) % block_b, (-f) % block_f, (-k) % block_k
+    if pb or pk:
+        x = jnp.pad(x, ((0, pb), (0, pk)))
+    if pf or pk:
+        codes = jnp.pad(codes, ((0, pf), (0, pk // cpb)))
+        scale = jnp.pad(scale, (0, pf))
+    bb, ff, kk = b + pb, f + pf, k + pk
+    nk = kk // block_k
+
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_kernel_body, bw=bw, grid_values=grid_values, nk=nk
+        ),
+        grid=(bb // block_b, ff // block_f, nk),
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, kk_: (i, kk_)),
+            pl.BlockSpec((block_f, block_k // cpb), lambda i, j, kk_: (j, kk_)),
+            pl.BlockSpec((block_f,), lambda i, j, kk_: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_f), lambda i, j, kk_: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bb, ff), jnp.float32),
+        interpret=interpret,
+    )(x, codes, scale)
+    return out[:b, :f]

@@ -1,0 +1,120 @@
+"""TPU Pallas kernel: paper-faithful canonical-LUT **slice streaming** GEMM.
+
+This kernel maps the paper's §IV-C dataflow natively onto the TPU memory
+hierarchy:
+
+* the canonical LUT and the reordering LUT live in **HBM** (the "DRAM bank"),
+* each grid step streams exactly the two LUT *columns* addressed by the
+  current activation group into **VMEM** (the "local buffer") via
+  **scalar-prefetched, data-dependent BlockSpec index maps** — Pallas's
+  pipelined block fetch plays the role of the paper's slice streaming, with
+  double-buffering as the overlap the paper gets from its 3-stage pipelined
+  bank access,
+* the streamed slice is then reused across **all M weight rows** before the
+  grid advances (LUT-stationary reuse, paper Fig. 7).
+
+Lookups are executed on the **MXU as one-hot contractions** (no gathers):
+
+    perm   = onehot(reorder_col)          [R, R]   (reordering-LUT lookup)
+    permuted_slice = perm @ canon_col     [R, 1]
+    vals   = onehot(w_codes) @ permuted_slice    [M, 1]
+    out[:, n] += vals                              (accumulate over G)
+
+Grid = (N, G): one (activation column, K-group) slice pair per step; the
+output column block is revisited across G with an f32/int32 accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _stream_kernel_body(
+    msrank_ref,      # scalar-prefetch [G*N] int32
+    permid_ref,      # scalar-prefetch [G*N] int32
+    wpacked_ref,     # [M, 1] int32 (block: column g)
+    canon_ref,       # [R, 1] streamed canonical-LUT slice
+    reorder_ref,     # [R, 1] streamed reordering-LUT slice
+    out_ref,         # [M, 1] accumulator (block: column n)
+    *,
+    r: int,
+    ng: int,
+):
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    rcol = reorder_ref[...][:, 0]                          # [R] int32 codes
+    ccol = canon_ref[...][:, 0].astype(jnp.float32)        # [R]
+    wcol = wpacked_ref[...][:, 0]                          # [M] int32
+
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (r, r), 1)
+    # reordering-LUT lookup on the MXU: permuted[c] = ccol[rcol[c]]
+    perm = (rcol[:, None] == iota_r).astype(jnp.float32)   # [R, R]
+    permuted = jax.lax.dot_general(
+        perm, ccol[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                      # [R, 1]
+    # canonical-LUT lookup on the MXU: vals[m] = permuted[wcol[m]]
+    iota_mr = jax.lax.broadcasted_iota(jnp.int32, (wcol.shape[0], r), 1)
+    onehot_w = (wcol[:, None] == iota_mr).astype(jnp.float32)  # [M, R]
+    vals = jax.lax.dot_general(
+        onehot_w, permuted, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                      # [M, 1]
+    out_ref[...] += vals
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r", "interpret")
+)
+def lut_stream_gemm(
+    wpacked: Array,     # [M, G] int32 packed weight codes
+    msrank: Array,      # [G, N] int32 canonical-LUT column ids
+    permid: Array,      # [G, N] int32 reordering-LUT column ids
+    canonical: Array,   # [R, C] LUT (stays in HBM; columns streamed)
+    reordering: Array,  # [R, P!] LUT (stays in HBM; columns streamed)
+    *,
+    r: int,
+    interpret: bool = True,
+) -> Array:
+    """Slice-streaming canonical-LUT GEMM; returns float32 [M, N].
+
+    Semantics match :func:`repro.kernels.ref.lut_stream_gemm_ref` (int32
+    partial-product accumulation, returned as f32 — exact for |sum| < 2^24).
+    """
+    m, gdim = wpacked.shape
+    n = msrank.shape[1]
+    # Scalar prefetch wants flat int32 vectors indexed by (n, g).
+    ms_flat = msrank.T.reshape(-1)   # [(n, g)] -> n * G + g
+    pid_flat = permid.T.reshape(-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n, gdim),
+        in_specs=[
+            # weight column g: [M, 1]
+            pl.BlockSpec((m, 1), lambda ni, gi, ms, pid: (0, gi)),
+            # canonical-LUT slice: column ms[ni*G + gi]
+            pl.BlockSpec((r, 1), lambda ni, gi, ms, pid: (0, ms[ni * gdim + gi])),
+            # reordering-LUT slice: column pid[ni*G + gi]
+            pl.BlockSpec((r, 1), lambda ni, gi, ms, pid: (0, pid[ni * gdim + gi])),
+        ],
+        out_specs=pl.BlockSpec((m, 1), lambda ni, gi, ms, pid: (0, ni)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_stream_kernel_body, r=r, ng=gdim),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(ms_flat, pid_flat, wpacked, canonical, reordering)
+    return out

@@ -1,0 +1,79 @@
+"""Jitted wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework uses; each dispatches to
+the Pallas kernel (``interpret=True`` on CPU — the kernels are authored for
+TPU) and owns the host-side preparation the paper assigns to the host CPU
+(activation quantization, canonicalization, LUT construction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, luts, packing
+from repro.core.quantize import QuantSpec, quantize
+from repro.kernels import lut_dequant_gemm as _dq
+from repro.kernels import lut_stream_gemm as _ss
+
+Array = jax.Array
+
+
+def lut_dequant_gemm(
+    x: Array,
+    codes: Array,
+    scale: Array,
+    *,
+    bw: int,
+    k: int,
+    grid_kind: str = "int",
+    interpret: bool = True,
+    **block_kw,
+) -> Array:
+    """Packed-code GEMM (TPU-optimized path).  x [B,K] -> y [B,F]."""
+    grid = QuantSpec(bw, grid_kind).grid()
+    return _dq.lut_dequant_gemm(
+        x,
+        codes,
+        scale,
+        bw=bw,
+        k=k,
+        grid_values=tuple(float(v) for v in np.asarray(grid)),
+        interpret=interpret,
+        **block_kw,
+    )
+
+
+def lut_stream_gemm_full(
+    wcodes: Array,
+    acodes: Array,
+    pack: luts.LutPack,
+    *,
+    interpret: bool = True,
+) -> Array:
+    """Paper-faithful slice-streaming GEMM from raw codes.
+
+    Performs the host-side steps (§IV-A step 1: canonicalize + index), then
+    launches the streaming kernel.  Returns the int-exact GEMM as float32.
+    """
+    p = pack.p
+    wcodes, acodes, corr = engine._pad_groups(
+        wcodes, acodes, p, pack.wgrid, pack.agrid
+    )
+    idx = engine.canonicalize_activations(acodes, pack)
+    m, k = wcodes.shape
+    g = k // p
+    wpacked = packing.pack_index(wcodes.reshape(m, g, p), pack.bw)
+    out = _ss.lut_stream_gemm(
+        wpacked,
+        idx.msrank,
+        idx.permid,
+        jnp.asarray(pack.canonical.astype(np.float32)),
+        jnp.asarray(pack.reordering.astype(np.int32)),
+        r=pack.n_rows,
+        interpret=interpret,
+    )
+    return out - corr

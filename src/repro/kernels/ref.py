@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated with ``np.testing.assert_allclose``
+against these references across shape/dtype sweeps (see
+``tests/test_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+
+Array = jax.Array
+
+
+def lut_dequant_gemm_ref(
+    x: Array,
+    codes: Array,
+    scale: Array,
+    *,
+    bw: int,
+    k: int,
+    grid: np.ndarray,
+) -> Array:
+    """Oracle for the packed-code dequant GEMM.
+
+    ``x``: [B, K] float; ``codes``: [F, ceil(K/cpb)] uint8 bit-packed weight
+    codes; ``scale``: [F] per-output-channel scales.  Returns [B, F] float32.
+    """
+    g = jnp.asarray(grid, dtype=jnp.float32)
+    wcodes = packing.unpack_bits(codes, bw)[:, :k]        # [F, K]
+    w_t = g[wcodes] * scale[:, None]                       # [F, K]
+    return jnp.einsum(
+        "bk,fk->bf", x.astype(jnp.float32), w_t, preferred_element_type=jnp.float32
+    )
+
+
+def lut_stream_gemm_ref(
+    wpacked: Array,
+    msrank: Array,
+    permid: Array,
+    canonical: Array,
+    reordering: Array,
+) -> Array:
+    """Oracle for the slice-streaming canonical-LUT GEMM.
+
+    ``wpacked``: [M, G] packed weight codes; ``msrank``/``permid``: [G, N]
+    canonical/reordering LUT column ids; ``canonical``: [R, C]; ``reordering``:
+    [R, P!].  Returns [M, N] int32 partial-product sums — the integer GEMM.
+    """
+    wcanon = reordering[wpacked[:, :, None], permid[None, :, :]]   # [M,G,N]
+    vals = canonical[wcanon, msrank[None, :, :]]                    # [M,G,N]
+    return jnp.sum(vals.astype(jnp.int32), axis=1)
+
+
+def flash_attention_ref(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> Array:
+    """Oracle for flash attention: plain masked softmax attention (f32)."""
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, s, hkv, rep, hd).astype(jnp.float32)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)

@@ -1,0 +1,589 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init).  For each cell this driver:
+
+1. builds the full-scale config, abstract parameters (``jax.eval_shape`` —
+   no allocation), sharding specs, and ShapeDtypeStruct inputs;
+2. ``jit(step).lower(...).compile()`` on the requested mesh — success proves
+   the distribution config is coherent (deliverable e); records
+   ``memory_analysis()`` and compile wall time;
+3. (single-pod only) runs the **calibrated scan costing**: XLA's
+   ``cost_analysis`` counts a ``lax.scan`` body ONCE (verified empirically),
+   so per-unit costs are extracted by compiling depth variants (every
+   variable segment at k=2, then each at k=3) and differencing:
+
+       total = cost(A) + Σ_s (n_s − 2) · (cost(B_s) − cost(A))
+
+   The same differencing applies to collective bytes parsed from the
+   compiled HLO (ring-model per-chip traffic, replica-group-size aware).
+
+Results land in ``runs/dryrun/<mesh>/<arch>__<shape>.json`` and are consumed
+by ``benchmarks/roofline.py`` and EXPERIMENTS.md.
+
+Train cells lower ``train_step`` (dense bf16 params + AdamW, FSDP+TP);
+prefill/decode cells lower ``prefill_step``/``serve_step`` with
+**LoCaLUT-quantized** parameters (packed low-bit codes — the paper's
+technique exercised at scale).  ``--dense`` lowers the unquantized serve
+variants for the §Perf before/after comparison.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import LutLinearSpec
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.model import build_model, quantize_model
+from repro.serve import serving
+from repro.train import optimizer as opt
+from repro.train import train_step as ts
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+QUANT_SPEC = LutLinearSpec(bw=4, ba=4, mode="dequant")
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "runs", "dryrun")
+
+# §Perf hillclimb variants: config transforms applied on top of the baseline.
+VARIANTS = {
+    "ring": lambda c: dataclasses.replace(c, ring_window_cache=True),
+    "mla-headshard": lambda c: dataclasses.replace(c, mla_prefill_headshard=True),
+    "kv-int8": lambda c: dataclasses.replace(c, kv_cache_int8=True),
+    "ring+kv-int8": lambda c: dataclasses.replace(
+        c, ring_window_cache=True, kv_cache_int8=True
+    ),
+    "bf16-attend": lambda c: dataclasses.replace(c, attend_bf16=True),
+    "gqa-headshard": lambda c: dataclasses.replace(c, gqa_prefill_headshard=True),
+    "best-gqa-prefill": lambda c: dataclasses.replace(
+        c, gqa_prefill_headshard=True, attend_bf16=True
+    ),
+    "best-decode": lambda c: dataclasses.replace(
+        c, ring_window_cache=True, kv_cache_int8=True, attend_bf16=True
+    ),
+    "best-prefill": lambda c: dataclasses.replace(
+        c, mla_prefill_headshard=True, attend_bf16=True
+    ),
+}
+# weight-bitwidth variants handled via QUANT_SPEC override
+BW_VARIANTS = {"w1": 1, "w2": 2, "w8": 8}
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> Optional[str]:
+    if shape == "long_500k" and not cfg.subquadratic:
+        return (
+            "full-attention decoder: 500k-token decode requires sub-quadratic "
+            "attention (DESIGN.md §5 skip list)"
+        )
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Depth knobs for calibrated scan costing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DepthKnob:
+    name: str
+    n_real: int                   # real unit count of this segment
+    set_k: callable               # (cfg, k) -> cfg with this segment at k units
+
+
+def depth_knobs(cfg: ModelConfig) -> list[DepthKnob]:
+    knobs = []
+    if cfg.layer_pattern:
+        period = len(cfg.layer_pattern)
+        n_units, rem = divmod(cfg.n_layers, period)
+        knobs.append(
+            DepthKnob(
+                "stack", n_units,
+                lambda c, k, p=period, r=rem: dataclasses.replace(c, n_layers=p * k + r),
+            )
+        )
+    elif cfg.moe is not None and cfg.first_dense_layers:
+        fd = cfg.first_dense_layers
+        knobs.append(
+            DepthKnob(
+                "stack", cfg.n_layers - fd,
+                lambda c, k, f=fd: dataclasses.replace(c, n_layers=f + k),
+            )
+        )
+    else:
+        knobs.append(
+            DepthKnob(
+                "stack", cfg.n_layers,
+                lambda c, k: dataclasses.replace(c, n_layers=k),
+            )
+        )
+    if cfg.is_encdec:
+        knobs.append(
+            DepthKnob(
+                "encoder", cfg.encoder_layers,
+                lambda c, k: dataclasses.replace(c, encoder_layers=k),
+            )
+        )
+    return knobs
+
+
+def with_knobs(cfg: ModelConfig, ks: dict) -> ModelConfig:
+    for knob in depth_knobs(cfg):
+        cfg = knob.set_k(cfg, ks.get(knob.name, 2))
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; weak-type-correct, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    sds = jax.ShapeDtypeStruct
+    out = {}
+    if sh["kind"] == "train":
+        text = s
+        if cfg.frontend is not None and not cfg.is_encdec:
+            text = s - cfg.frontend_seq     # image positions count toward seq
+        out["tokens"] = sds((b, text + 1), jnp.int32)
+        if cfg.frontend is not None:
+            out["prefix_embeds"] = sds((b, cfg.frontend_seq, cfg.frontend_dim), jnp.float32)
+    elif sh["kind"] == "prefill":
+        text = s
+        if cfg.frontend is not None and not cfg.is_encdec:
+            text = s - cfg.frontend_seq
+        out["tokens"] = sds((b, text), jnp.int32)
+        if cfg.frontend is not None:
+            out["prefix_embeds"] = sds((b, cfg.frontend_seq, cfg.frontend_dim), jnp.float32)
+    else:  # decode
+        out["tokens"] = sds((b, 1), jnp.int32)
+        out["pos"] = sds((), jnp.int32)
+    return out
+
+
+def make_ctx(mesh, shape_name: str, kind: str) -> shd.ShardCtx:
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    return shd.ShardCtx(
+        mesh=mesh,
+        dp_axes=dp_axes,
+        tp_axis="model",
+        fsdp=(kind == "train"),
+        seq_shard=(shape_name == "long_500k"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Collective-byte parsing (ring model, replica-group aware)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Per-chip collective traffic (bytes) by op kind, ring model."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        size = _shape_bytes(type_str)
+        g = 1
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            g = len(mg.group(1).split(","))
+        else:
+            mg2 = _GROUPS2_RE.search(line)
+            if mg2:
+                g = int(mg2.group(2))
+        if kind == "collective-permute":
+            factor = 1.0            # pairwise; no replica_groups attribute
+        elif g <= 1:
+            factor = 0.0
+        elif kind == "all-reduce":
+            factor = 2.0 * (g - 1) / g
+        elif kind == "all-gather":
+            factor = (g - 1) / g
+        elif kind == "reduce-scatter":
+            factor = float(g - 1)       # result is the scattered piece
+        elif kind == "all-to-all":
+            factor = (g - 1) / g
+        else:
+            factor = 1.0
+        out[kind] += size * factor
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lowering one cell
+# ---------------------------------------------------------------------------
+
+
+def _abstract_state(cfg: ModelConfig, kind: str, quantized: bool,
+                    quant_spec: LutLinearSpec = QUANT_SPEC):
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    if kind == "train":
+        return jax.eval_shape(lambda: ts.init_train_state(model, key))
+    if quantized:
+        return jax.eval_shape(
+            lambda: quantize_model(transformer.init_params(cfg, key), cfg, quant_spec)
+        )
+    return jax.eval_shape(lambda: transformer.init_params(cfg, key))
+
+
+def _state_specs(cfg, state, ctx, kind):
+    if kind == "train":
+        pspec = shd.param_specs(cfg, state.params, ctx)
+        return ts.TrainState(
+            params=pspec,
+            opt={"mu": pspec, "nu": pspec, "step": P()},
+            step=P(),
+        )
+    return shd.param_specs(cfg, state, ctx)
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh,
+    *,
+    quantized: bool = True,
+    donate: bool = True,
+    quant_spec: LutLinearSpec = QUANT_SPEC,
+):
+    """Lower + compile one cell; returns (compiled, meta dict)."""
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    model = build_model(cfg)
+    ctx = make_ctx(mesh, shape_name, kind)
+    dp = ctx.dp_axes
+    ins = input_specs(cfg, shape_name)
+    state = _abstract_state(cfg, kind, quantized, quant_spec)
+    sspec = _state_specs(cfg, state, ctx, kind)
+    s_shard = shd.to_shardings(sspec, mesh)
+    tok_shard = NamedSharding(mesh, P(dp, None) if sh["batch"] % ctx.dp_size() == 0 else P())
+    pre_shard = NamedSharding(mesh, P(dp, None, None) if sh["batch"] % ctx.dp_size() == 0 else P())
+
+    t0 = time.time()
+    if kind == "train":
+        step_fn = ts.make_train_step(model, opt.AdamWConfig(), ctx=ctx, remat=True)
+        batch = {"tokens": ins["tokens"]}
+        b_shard = {"tokens": tok_shard}
+        if "prefix_embeds" in ins:
+            batch["prefix_embeds"] = ins["prefix_embeds"]
+            b_shard["prefix_embeds"] = pre_shard
+        fn = jax.jit(
+            step_fn,
+            in_shardings=(s_shard, b_shard),
+            out_shardings=(s_shard, None),
+            donate_argnums=(0,) if donate else (),
+        )
+        lowered = fn.lower(state, batch)
+    elif kind == "prefill":
+        caches = jax.eval_shape(
+            lambda: model.init_cache(sh["batch"], sh["seq"], dtype=jnp.bfloat16)
+        )
+        c_spec = shd.cache_specs(cfg, caches, ctx)
+        c_shard = shd.to_shardings(c_spec, mesh)
+        pf = serving.make_prefill_step(model, ctx=ctx)
+
+        def step(params, tokens, caches, prefix_embeds=None):
+            return pf(params, tokens, caches, prefix_embeds)
+
+        args = [state, ins["tokens"], caches]
+        in_sh = [s_shard, tok_shard, c_shard]
+        if "prefix_embeds" in ins:
+            args.append(ins["prefix_embeds"])
+            in_sh.append(pre_shard)
+        fn = jax.jit(
+            step,
+            in_shardings=tuple(in_sh),
+            out_shardings=(None, c_shard),
+            donate_argnums=(2,) if donate else (),
+        )
+        lowered = fn.lower(*args)
+    else:  # decode
+        caches = jax.eval_shape(
+            lambda: model.init_cache(sh["batch"], sh["seq"], dtype=jnp.bfloat16)
+        )
+        c_spec = shd.cache_specs(cfg, caches, ctx)
+        c_shard = shd.to_shardings(c_spec, mesh)
+        sv = serving.make_serve_step(model, ctx=ctx)
+        fn = jax.jit(
+            sv,
+            in_shardings=(s_shard, tok_shard, c_shard, NamedSharding(mesh, P())),
+            out_shardings=(None, c_shard),
+            donate_argnums=(2,) if donate else (),
+        )
+        lowered = fn.lower(state, ins["tokens"], caches, ins["pos"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    meta = {"t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1)}
+    return compiled, meta
+
+
+def analyze_compiled(compiled) -> dict:
+    out = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["flops"] = float(ca.get("flops", 0.0))
+        out["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        out["cost_error"] = repr(e)
+    try:
+        ma = compiled.memory_analysis()
+        for attr in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+        ):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    except Exception as e:  # pragma: no cover
+        out["memory_error"] = repr(e)
+    try:
+        out["collective_bytes"] = parse_collective_bytes(compiled.as_text())
+    except Exception as e:  # pragma: no cover
+        out["collective_error"] = repr(e)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Calibrated scan costing
+# ---------------------------------------------------------------------------
+
+
+def calibrated_costs(cfg: ModelConfig, shape_name: str, mesh, *, quantized: bool,
+                     quant_spec: LutLinearSpec = QUANT_SPEC) -> dict:
+    """Scale per-unit scan-body costs to the real depth (see module doc).
+
+    Variants trace with ``REPRO_COST_UNROLL=1``: structural scans (layer
+    stack, chunked attention, chunked xent) fully unroll so HLO cost analysis
+    counts every iteration; depth differencing then recovers exact per-unit
+    costs.  SSM/RWKV token recurrences stay rolled (flags.py rationale).
+    """
+    knobs = depth_knobs(cfg)
+    base_cfg = with_knobs(cfg, {})
+    prev = os.environ.get("REPRO_COST_UNROLL")
+    os.environ["REPRO_COST_UNROLL"] = "1"
+    try:
+        compiled, meta = lower_cell(
+            base_cfg, shape_name, mesh, quantized=quantized, donate=False,
+            quant_spec=quant_spec,
+        )
+        a = analyze_compiled(compiled)
+        del compiled
+        variants = {}
+        for knob in knobs:
+            vcfg = with_knobs(cfg, {knob.name: 3})
+            c, _ = lower_cell(vcfg, shape_name, mesh, quantized=quantized,
+                              donate=False, quant_spec=quant_spec)
+            variants[knob.name] = analyze_compiled(c)
+            del c
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_COST_UNROLL", None)
+        else:
+            os.environ["REPRO_COST_UNROLL"] = prev
+
+    def scale(field, sub=None):
+        def get(d):
+            v = d.get(field, 0.0)
+            if sub is not None:
+                v = d.get(field, {}).get(sub, 0.0)
+            return float(v or 0.0)
+
+        total = get(a)
+        for knob in knobs:
+            total += (knob.n_real - 2) * max(get(variants[knob.name]) - get(a), 0.0)
+        return total
+
+    out = {
+        "flops": scale("flops"),
+        "bytes_accessed": scale("bytes_accessed"),
+        "collective_bytes": {
+            k: scale("collective_bytes", k)
+            for k in ("all-reduce", "all-gather", "reduce-scatter",
+                      "all-to-all", "collective-permute")
+        },
+        "per_unit": {
+            knob.name: {
+                "n_real": knob.n_real,
+                "flops": max(
+                    variants[knob.name].get("flops", 0.0) - a.get("flops", 0.0), 0.0
+                ),
+            }
+            for knob in knobs
+        },
+        "base_meta": meta,
+    }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, do_cost: bool,
+             quantized: bool = True, results_dir: str = RESULTS_DIR,
+             variant: str = "") -> dict:
+    cfg = get_config(arch)
+    quant_spec = QUANT_SPEC
+    if variant in VARIANTS:
+        cfg = VARIANTS[variant](cfg)
+    elif variant in BW_VARIANTS:
+        quant_spec = dataclasses.replace(QUANT_SPEC, bw=BW_VARIANTS[variant])
+    elif variant:
+        raise KeyError(f"unknown variant {variant}")
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "variant": variant,
+        "quantized": quantized and SHAPES[shape_name]["kind"] != "train",
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = reason
+        return _save(rec, results_dir)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        compiled, meta = lower_cell(cfg, shape_name, mesh, quantized=quantized,
+                                    quant_spec=quant_spec)
+        rec.update(meta)
+        rec["full_analysis"] = analyze_compiled(compiled)
+        del compiled
+        rec["status"] = "compiled"
+        if do_cost and mesh_kind == "single":
+            rec["calibrated"] = calibrated_costs(
+                cfg, shape_name, mesh, quantized=quantized, quant_spec=quant_spec
+            )
+    except Exception as e:
+        rec["status"] = "failed"
+        rec["error"] = repr(e)
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return _save(rec, results_dir)
+
+
+def _save(rec: dict, results_dir: str) -> dict:
+    d = os.path.join(results_dir, rec["mesh"])
+    os.makedirs(d, exist_ok=True)
+    suffix = "" if rec.get("quantized", True) or rec["shape"] == "train_4k" else "__dense"
+    if rec.get("variant"):
+        suffix += f"__{rec['variant']}"
+    path = os.path.join(d, f"{rec['arch']}__{rec['shape']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    rec["_path"] = path
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=["all"] + list(SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--cost", action="store_true", help="run calibrated scan costing")
+    ap.add_argument("--dense", action="store_true", help="serve cells without quantization")
+    ap.add_argument("--variant", default="", help="perf variant: " + ",".join(
+        list(VARIANTS) + list(BW_VARIANTS)))
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--results-dir", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                quant = not args.dense
+                suffix = "" if quant or shape_name == "train_4k" else "__dense"
+                if args.variant:
+                    suffix += f"__{args.variant}"
+                path = os.path.join(
+                    args.results_dir, mesh_kind, f"{arch}__{shape_name}{suffix}.json"
+                )
+                if args.skip_done and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("compiled", "skipped") and (
+                        not args.cost
+                        or mesh_kind != "single"
+                        or "calibrated" in prev
+                        or prev.get("status") == "skipped"
+                    ):
+                        print(f"[skip-done] {arch} {shape_name} {mesh_kind}")
+                        continue
+                t0 = time.time()
+                rec = run_cell(
+                    arch, shape_name, mesh_kind,
+                    do_cost=args.cost, quantized=quant,
+                    results_dir=args.results_dir, variant=args.variant,
+                )
+                print(
+                    f"[{rec['status']:8s}] {arch:28s} {shape_name:12s} {mesh_kind:6s}"
+                    f" ({time.time()-t0:6.1f}s) {rec.get('skip_reason', rec.get('error', ''))[:80]}"
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model substrate: every assigned architecture, built from shared blocks.
+
+All models are functional: ``init(cfg, key) -> params`` (nested dict pytree)
+and pure apply functions.  Layer stacks are ``lax.scan``-ed over stacked
+parameters so 64–81-layer configs compile quickly; heterogeneous layer
+patterns (gemma2 local/global alternation, zamba2 shared-attention
+interleave, deepseek first-dense-layer) scan over the pattern period.
+
+Linear layers are either dense arrays or :class:`repro.core.QuantizedLinear`
+— LoCaLUT quantization is a first-class, drop-in transform
+(:func:`repro.models.model.quantize_model`).
+"""

@@ -1,0 +1,464 @@
+"""Attention variants: GQA (w/ sliding window + logit softcap), MLA, cross.
+
+All functions are cache-aware: ``cache=None`` runs full-sequence (train /
+prefill-style) attention; otherwise ``cache`` is a dict of preallocated
+buffers written at ``pos`` (decode).  MLA caches the *compressed* latent
+(DeepSeek-style absorbed formulation), which is what makes the 32k decode
+cells of deepseek-v2-lite cheap on HBM.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(cfg: ModelConfig, key, *, cross: bool = False) -> dict:
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model),
+    }
+    return p
+
+
+def _split_heads(x: Array, n: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _attend(
+    q: Array,            # [B, S, H, hd]
+    k: Array,            # [B, T, Hkv, hd]
+    v: Array,            # [B, T, Hkv, hd]
+    *,
+    mask: Array,         # [B, 1, S, T] or broadcastable boolean
+    softcap_val: Optional[float],
+    bf16_operands: bool = False,
+) -> Array:
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, s, hkv, rep, hd)
+    if bf16_operands:
+        # Mixed-precision attend (§Perf): keep Q/K/V + probabilities in bf16
+        # with f32 MXU accumulation — no f32 copy of the (cache-sized) K/V
+        # ever materializes.  This is the TPU-canonical formulation.
+        scores = jnp.einsum(
+            "bsgrd,btgd->bgrst", qg.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        ) / jnp.sqrt(hd).astype(jnp.float32)
+        scores = layers.softcap(scores, softcap_val)
+        scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(jnp.bfloat16)
+        out = jnp.einsum(
+            "bgrst,btgd->bsgrd", w, v.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+        return out.reshape(b, s, h, hd).astype(q.dtype)
+    scores = jnp.einsum(
+        "bsgrd,btgd->bgrst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    scores = layers.softcap(scores, softcap_val)
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def causal_mask(s: int, t: int, *, offset: int = 0, window: Optional[int] = None):
+    """[1, 1, s, t] boolean; query i (global pos offset+i) sees keys <= it."""
+    qpos = jnp.arange(s)[:, None] + offset
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+# Above this many query positions, full-sequence attention runs in query
+# chunks (lax.scan) so scores never materialize at [S, S] — required for the
+# 32k prefill cells (an [B,H,32k,32k] f32 score tensor is terabytes).
+CHUNK_THRESHOLD = 4096
+CHUNK_SIZE = 512
+
+
+def _attend_chunked(
+    q: Array,            # [B, S, H, hd]
+    k: Array,            # [B, T, Hkv, hd]
+    v: Array,
+    positions: Array,    # [B, S] query positions
+    *,
+    window: Optional[int],
+    softcap_val: Optional[float],
+    causal: bool,
+    bf16_operands: bool = False,
+) -> Array:
+    b, s, h, hd = q.shape
+    nc = s // CHUNK_SIZE
+    qc = q.reshape(b, nc, CHUNK_SIZE, h, hd)
+    pc = positions.reshape(b, nc, CHUNK_SIZE)
+
+    def body(_, inp):
+        q_i, pos_i = inp                                   # [B, C, H, hd], [B, C]
+        kpos = jnp.arange(k.shape[1])[None, None, :]
+        m = jnp.ones((b, CHUNK_SIZE, k.shape[1]), bool) if not causal else (
+            kpos <= pos_i[:, :, None]
+        )
+        if window is not None:
+            m &= kpos > pos_i[:, :, None] - window
+        o = _attend(q_i, k, v, mask=m[:, None], softcap_val=softcap_val,
+                    bf16_operands=bf16_operands)
+        return None, o
+
+    from repro import flags
+
+    _, outs = jax.lax.scan(
+        body, None, (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(pc, 1, 0)),
+        unroll=flags.scan_unroll(),
+    )
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+
+
+def _quant_rows(x: Array) -> tuple[Array, Array]:
+    """Symmetric int8 per-(token, head) row quantization: [B,S,H,hd] ->
+    (int8 codes, f32 scales [B,S,H])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    codes = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return codes, scale
+
+
+def _ring_update(cache_arr: Array, new: Array, global_start, tail: int):
+    """Write the last ``tail`` tokens of ``new`` into the ring buffer at their
+    ``global_position % W`` slots."""
+    w = cache_arr.shape[1]
+    idx = (global_start + jnp.arange(tail)) % w
+    return cache_arr.at[:, idx].set(new[:, -tail:].astype(cache_arr.dtype))
+
+
+def gqa_attention(
+    p: dict,
+    x: Array,
+    *,
+    cfg: ModelConfig,
+    positions: Array,                  # [B, S] absolute positions
+    cache: Optional[dict] = None,      # {"k": [B, Smax, Hkv, hd], "v": ...}
+    pos: Optional[Array] = None,       # scalar write offset for decode
+    window: Optional[int] = None,
+    causal: bool = True,
+    ctx=None,                          # ShardCtx (prefill head-sharding hint)
+) -> tuple[Array, Optional[dict]]:
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = _split_heads(linear(p["wq"], x), cfg.n_heads)
+    k = _split_heads(linear(p["wk"], x), cfg.n_kv_heads)
+    v = _split_heads(linear(p["wv"], x), cfg.n_kv_heads)
+    q = layers.apply_rope(q, positions, cfg.rope_theta, cfg.rope_kind)
+    k = layers.apply_rope(k, positions, cfg.rope_theta, cfg.rope_kind)
+
+    if (
+        cfg.gqa_prefill_headshard
+        and ctx is not None
+        and ctx.mesh is not None
+        and s > 1
+        and cfg.n_heads % ctx.tp_size() == 0
+    ):
+        # Prefill: put query heads on the TP axis, replicate the small K/V —
+        # scores/softmax become chip-local instead of model-axis-replicated
+        # (§Perf; the GQA analogue of the MLA head-sharding fix).
+        from jax.sharding import PartitionSpec as P
+
+        dp = ctx.dp_axes if b % ctx.dp_size() == 0 else None
+        q = ctx.constrain(q, P(dp, None, ctx.tp_axis, None))
+        k = ctx.constrain(k, P(dp, None, None, None))
+        v = ctx.constrain(v, P(dp, None, None, None))
+
+    # Sliding-window layers may carry a ring-buffer cache of exactly `window`
+    # slots (Mistral-style): decode reads W entries instead of the full
+    # context — §Perf iteration (gemma2 local layers: 8x fewer cache bytes).
+    if cache is not None and window is not None and cache["k"].shape[1] <= window:
+        w = cache["k"].shape[1]
+        if s == 1:  # decode: write slot pos % W, attend over the ring
+            kc = _ring_update(cache["k"], k, pos, 1)
+            vc = _ring_update(cache["v"], v, pos, 1)
+            slots = jnp.arange(w)
+            kpos_global = pos - ((pos - slots) % w)        # in (pos-W, pos]
+            m = jnp.broadcast_to((kpos_global >= 0)[None, None, :], (b, 1, w))
+            out = _attend(q, kc, vc, mask=m[:, None],
+                          softcap_val=cfg.attn_logit_softcap,
+                          bf16_operands=cfg.attend_bf16)
+        else:       # prefill: in-sequence attention; store the last W tokens
+            if s > CHUNK_THRESHOLD and s % CHUNK_SIZE == 0:
+                out = _attend_chunked(
+                    q, k, v, positions, window=window,
+                    softcap_val=cfg.attn_logit_softcap, causal=True,
+                    bf16_operands=cfg.attend_bf16,
+                )
+            else:
+                m = causal_mask(s, s, window=window)
+                out = _attend(q, k, v, mask=m, softcap_val=cfg.attn_logit_softcap,
+                              bf16_operands=cfg.attend_bf16)
+            tail = min(s, w)
+            kc = _ring_update(cache["k"], k, pos + s - tail, tail)
+            vc = _ring_update(cache["v"], v, pos + s - tail, tail)
+        y = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+        return y, {"k": kc, "v": vc}
+
+    # int8 KV cache (§Perf): store codes + per-row scales; attention reads
+    # half the bytes.  Reuses the paper's symmetric-quantization machinery.
+    if cache is not None and "k_s" in cache:
+        k8, ks = _quant_rows(k)
+        v8, vs = _quant_rows(v)
+        kc8 = jax.lax.dynamic_update_slice(cache["k"], k8, (0, pos, 0, 0))
+        ksc = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, pos, 0))
+        vc8 = jax.lax.dynamic_update_slice(cache["v"], v8, (0, pos, 0, 0))
+        vsc = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, pos, 0))
+        kc = kc8.astype(jnp.float32) * ksc[..., None]
+        vc = vc8.astype(jnp.float32) * vsc[..., None]
+        new_cache = {"k": kc8, "k_s": ksc, "v": vc8, "v_s": vsc}
+        t = kc.shape[1]
+        if s > CHUNK_THRESHOLD and s % CHUNK_SIZE == 0:
+            out = _attend_chunked(
+                q, kc, vc, positions, window=window,
+                softcap_val=cfg.attn_logit_softcap, causal=True,
+                bf16_operands=cfg.attend_bf16,
+            )
+        else:
+            kpos = jnp.arange(t)[None, :]
+            qpos = positions[:, :, None]
+            m = kpos[:, None, :] <= qpos
+            if window is not None:
+                m &= kpos[:, None, :] > qpos - window
+            out = _attend(q, kc, vc, mask=m[:, None], softcap_val=cfg.attn_logit_softcap,
+                          bf16_operands=cfg.attend_bf16)
+        y = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+        return y, new_cache
+
+    if cache is not None:
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        if s > CHUNK_THRESHOLD and s % CHUNK_SIZE == 0:
+            out = _attend_chunked(
+                q, kc, vc, positions, window=window,
+                softcap_val=cfg.attn_logit_softcap, causal=True,
+                bf16_operands=cfg.attend_bf16,
+            )
+        else:
+            t = kc.shape[1]
+            kpos = jnp.arange(t)[None, :]
+            qpos = positions[:, :, None]                    # [B, S, 1]
+            m = kpos[:, None, :] <= qpos                    # [B, S, T]
+            if window is not None:
+                m &= kpos[:, None, :] > qpos - window
+            out = _attend(q, kc, vc, mask=m[:, None], softcap_val=cfg.attn_logit_softcap,
+                          bf16_operands=cfg.attend_bf16)
+    else:
+        new_cache = None
+        if cfg.attn_impl == "flash":
+            from repro.kernels.flash_attention import flash_attention
+
+            out = flash_attention(
+                q, k, v, causal=causal, window=window,
+                softcap=cfg.attn_logit_softcap,
+            )
+        elif s > CHUNK_THRESHOLD and s % CHUNK_SIZE == 0:
+            out = _attend_chunked(
+                q, k, v, positions, window=window,
+                softcap_val=cfg.attn_logit_softcap, causal=causal,
+                bf16_operands=cfg.attend_bf16,
+            )
+        else:
+            m = causal_mask(s, s, window=window) if causal else jnp.ones((1, 1, s, s), bool)
+            out = _attend(q, k, v, mask=m, softcap_val=cfg.attn_logit_softcap,
+                          bf16_operands=cfg.attend_bf16)
+    y = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention(
+    p: dict,
+    x: Array,
+    *,
+    cfg: ModelConfig,
+    enc_k: Array,     # [B, T, Hkv, hd]  (precomputed from encoder output)
+    enc_v: Array,
+) -> Array:
+    b, s, _ = x.shape
+    q = _split_heads(linear(p["wq"], x), cfg.n_heads)
+    m = jnp.ones((1, 1, s, enc_k.shape[1]), bool)
+    out = _attend(q, enc_k, enc_v, mask=m, softcap_val=None)
+    return linear(p["wo"], out.reshape(b, s, -1))
+
+
+def cross_kv(p: dict, enc_out: Array, *, cfg: ModelConfig) -> tuple[Array, Array]:
+    k = _split_heads(linear(p["wk"], enc_out), cfg.n_kv_heads)
+    v = _split_heads(linear(p["wv"], enc_out), cfg.n_kv_heads)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention, absorbed formulation)
+# ---------------------------------------------------------------------------
+
+
+def _dense_weight(p) -> Array:
+    """Raw [K, F] weight of a dense dict or a QuantizedLinear (MLA absorbs
+    W_kup/W_vup into the query/output paths, so it needs the matrix itself)."""
+    from repro.core import QuantizedLinear
+    from repro.core.api import dequantize_weights
+
+    if isinstance(p, QuantizedLinear):
+        return dequantize_weights(p)
+    return p["w"]
+
+
+def mla_init(cfg: ModelConfig, key) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "w_dkv": dense_init(ks[0], d, m.kv_lora_rank + m.qk_rope_dim),
+        "w_kup": dense_init(ks[1], m.kv_lora_rank, h * m.qk_nope_dim),
+        "w_vup": dense_init(ks[2], m.kv_lora_rank, h * m.v_head_dim),
+        "wq": dense_init(ks[3], d, h * (m.qk_nope_dim + m.qk_rope_dim)),
+        "wo": dense_init(ks[4], h * m.v_head_dim, d),
+        "kv_norm": layers.rmsnorm_init(m.kv_lora_rank),
+    }
+
+
+def mla_attention(
+    p: dict,
+    x: Array,
+    *,
+    cfg: ModelConfig,
+    positions: Array,
+    cache: Optional[dict] = None,   # {"ckv": [B, Smax, lora], "krope": [B, Smax, rope]}
+    pos: Optional[Array] = None,
+    ctx=None,                       # ShardCtx (prefill head-sharding hint)
+) -> tuple[Array, Optional[dict]]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dkv = linear(p["w_dkv"], x)
+    ckv, krope = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank :]
+    ckv = layers.norm(p["kv_norm"], ckv, "rmsnorm", cfg.norm_eps)
+    krope = layers.apply_rope(
+        krope[:, :, None, :], positions, cfg.rope_theta, "full"
+    )[:, :, 0, :]                                                   # [B,S,rope]
+
+    q = linear(p["wq"], x).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta, "full")
+
+    # Absorb W_kup into the query: q_lat[b,s,h,lora] = q_nope · W_kup^T
+    wkup = _dense_weight(p["w_kup"]).reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32), wkup)
+
+    if cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0)
+        )
+        krope_c = jax.lax.dynamic_update_slice(
+            cache["krope"], krope.astype(cache["krope"].dtype), (0, pos, 0)
+        )
+        t = ckv_c.shape[1]
+        kpos = jnp.arange(t)[None, None, :]
+        mask = kpos <= positions[:, :, None]
+        new_cache = {"ckv": ckv_c, "krope": krope_c}
+    else:
+        ckv_c, krope_c = ckv, krope
+        t = s
+        mask = jnp.arange(t)[None, None, :] <= positions[:, :, None]
+        new_cache = None
+
+    scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(jnp.float32)
+    ckv_f = ckv_c.astype(jnp.float32)
+    krope_f = krope_c.astype(jnp.float32)
+    qr_f = q_rope.astype(jnp.float32)
+
+    if (
+        cfg.mla_prefill_headshard
+        and ctx is not None
+        and ctx.mesh is not None
+        and s > 1
+    ):
+        # Prefill: replicate the small latent across TP and shard the absorbed
+        # query's HEAD dim instead — scores stay chip-local (no [B,H,S,T]
+        # all-reduce, one latent all-gather per layer instead).  §Perf.
+        from jax.sharding import PartitionSpec as P
+
+        dp = ctx.dp_axes if b % ctx.dp_size() == 0 else None
+        h_ax = ctx.tp_axis if h % ctx.tp_size() == 0 else None
+        ckv_f = ctx.constrain(ckv_f, P(dp, None, None))
+        krope_f = ctx.constrain(krope_f, P(dp, None, None))
+        q_lat = ctx.constrain(q_lat, P(dp, None, h_ax, None))
+        qr_f = ctx.constrain(qr_f, P(dp, None, h_ax, None))
+
+    if cfg.attend_bf16:
+        ckv_f = ckv_c.astype(jnp.bfloat16)
+        krope_f = krope_c.astype(jnp.bfloat16)
+        qr_f = q_rope.astype(jnp.bfloat16)
+        q_lat = q_lat.astype(jnp.bfloat16)
+
+    def latent_attend(q_lat_i, q_rope_i, pos_i):
+        sc = (
+            jnp.einsum("bshl,btl->bhst", q_lat_i, ckv_f,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bshr,btr->bhst", q_rope_i, krope_f,
+                         preferred_element_type=jnp.float32)
+        ) * scale
+        mk = jnp.arange(ckv_f.shape[1])[None, None, :] <= pos_i[:, :, None]
+        sc = jnp.where(mk[:, None], sc, -1e30)
+        w = jax.nn.softmax(sc, axis=-1)
+        if cfg.attend_bf16:
+            w = w.astype(jnp.bfloat16)
+        return jnp.einsum("bhst,btl->bshl", w, ckv_f,
+                          preferred_element_type=jnp.float32)
+
+    if s > 4096 and s % 512 == 0:
+        # chunked prefill: scores never materialize at [S, S]
+        nc = s // 512
+        def body(_, inp):
+            ql_i, qr_i, pos_i = inp
+            return None, latent_attend(ql_i, qr_i, pos_i)
+        from repro import flags
+
+        _, outs = jax.lax.scan(
+            body, None,
+            (jnp.moveaxis(q_lat.reshape(b, nc, 512, h, -1), 1, 0),
+             jnp.moveaxis(qr_f.reshape(b, nc, 512, h, -1), 1, 0),
+             jnp.moveaxis(positions.reshape(b, nc, 512), 1, 0)),
+            unroll=flags.scan_unroll(),
+        )
+        out_lat = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, m.kv_lora_rank)
+    else:
+        out_lat = latent_attend(q_lat, qr_f, positions)
+    wvup = _dense_weight(p["w_vup"]).reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bshl,lhv->bshv", out_lat, wvup).astype(x.dtype)
+    y = linear(p["wo"], out.reshape(b, s, h * m.v_head_dim))
+    return y, new_cache

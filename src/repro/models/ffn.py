@@ -1,0 +1,33 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear
+
+Array = jax.Array
+
+
+def ffn_init(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], cfg.d_model, d_ff),
+        "w_down": dense_init(ks[1], d_ff, cfg.d_model),
+    }
+    if cfg.gated_ffn:
+        p["w_gate"] = dense_init(ks[2], cfg.d_model, d_ff)
+    return p
+
+
+def ffn_apply(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    up = linear(p["w_up"], x)
+    if "w_gate" in p or (hasattr(p, "keys") and "w_gate" in p.keys()):
+        h = layers.activation(linear(p["w_gate"], x), cfg.ffn_act) * up
+    else:
+        h = layers.activation(up, cfg.ffn_act)
+    return linear(p["w_down"], h)

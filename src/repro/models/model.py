@@ -1,0 +1,143 @@
+"""Model facade: init / forward / prefill / decode + the LoCaLUT transform.
+
+:func:`quantize_model` is the paper's technique as a first-class framework
+feature: it walks any model's parameter tree and replaces every GEMM weight
+(attention projections, FFN, MoE experts, SSM/RWKV projections — the
+``quant_targets`` of the config) with a bit-packed
+:class:`repro.core.QuantizedLinear`.  Embeddings/LM head stay dense, matching
+the paper's §V-B workflow (PIM banks run the projections; the host keeps the
+rest).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import LutLinearSpec, QuantizedLinear, quantize_linear
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+_QUANT_LINEAR_NAMES = frozenset(
+    {
+        "wq", "wk", "wv", "wo", "wg", "wr",           # attention / rwkv mixes
+        "w_up", "w_gate", "w_down",                    # ffn / moe shared
+        "w_kup", "w_vup", "w_dkv",                     # MLA
+        "in_proj", "out_proj",                         # mamba2
+    }
+)
+_MOE_EXPERT_NAMES = frozenset({"w_gate", "w_up", "w_down"})
+
+
+def _quantize_dense(p: dict, spec: LutLinearSpec) -> QuantizedLinear:
+    w = p["w"]
+    bias = p.get("b")
+    n_lead = w.ndim - 2
+    fn = lambda w_, b_: quantize_linear(w_, spec, bias=b_)
+    for _ in range(n_lead):
+        fn = jax.vmap(fn)
+    if bias is None:
+        fn2 = lambda w_: quantize_linear(w_, spec)
+        for _ in range(n_lead):
+            fn2 = jax.vmap(fn2)
+        return fn2(w)
+    return fn(w, bias)
+
+
+def _quantize_raw(w: Array, spec: LutLinearSpec) -> QuantizedLinear:
+    fn = lambda w_: quantize_linear(w_, spec)
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(w)
+
+
+def quantize_model(params, cfg: ModelConfig, spec: LutLinearSpec):
+    """Replace GEMM weights with packed QuantizedLinear leaves (recursive)."""
+
+    def walk(node, under_moe: bool = False):
+        if isinstance(node, dict):
+            if "w" in node and not isinstance(node["w"], dict) and node["w"].ndim >= 2:
+                return node  # handled by the parent via name matching
+            out = {}
+            for k, v in node.items():
+                if (
+                    isinstance(v, dict)
+                    and "w" in v
+                    and hasattr(v["w"], "ndim")
+                    and v["w"].ndim >= 2
+                    and k in _QUANT_LINEAR_NAMES
+                ):
+                    out[k] = _quantize_dense(v, spec)
+                elif (
+                    under_moe
+                    and k in _MOE_EXPERT_NAMES
+                    and hasattr(v, "ndim")
+                    and v.ndim >= 3
+                ):
+                    out[k] = _quantize_raw(v, spec)
+                else:
+                    out[k] = walk(v, under_moe=(k == "moe") or under_moe and k != "shared")
+            return out
+        if isinstance(node, list):
+            return [walk(v, under_moe) for v in node]
+        return node
+
+    return walk(params)
+
+
+def maybe_dequant(p, dtype=jnp.bfloat16):
+    """Raw-array-or-QuantizedLinear -> dense array (used by MoE einsums)."""
+    if isinstance(p, QuantizedLinear):
+        from repro.core.api import dequantize_weights
+
+        fn = dequantize_weights
+        for _ in range(p.codes.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(p).astype(dtype)
+    return p
+
+
+@dataclasses.dataclass
+class Model:
+    """Thin facade bundling a config with the apply functions."""
+
+    cfg: ModelConfig
+
+    def init(self, key) -> dict:
+        return transformer.init_params(self.cfg, key)
+
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        return transformer.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def forward(self, params, tokens, **kw):
+        return transformer.forward(params, self.cfg, tokens, **kw)
+
+    def prefill(self, params, tokens, caches, *, prefix_embeds=None, ctx=None):
+        """Fill caches for positions [0, S); returns (last-pos logits [B,1,V],
+        caches).  Full-sequence logits are never materialized — at 32k×256k
+        vocab that tensor alone would be terabytes."""
+        logits, caches, _ = transformer.forward(
+            params, self.cfg, tokens, caches=caches, pos=jnp.int32(0),
+            prefix_embeds=prefix_embeds, is_prefill=True, ctx=ctx,
+            last_token_only=True,
+        )
+        return logits, caches
+
+    def decode_step(self, params, token, caches, pos, *, ctx=None):
+        """One token per sequence: token [B, 1], pos scalar int32."""
+        logits, caches, _ = transformer.forward(
+            params, self.cfg, token, caches=caches, pos=pos, ctx=ctx
+        )
+        return logits, caches
+
+    def quantize(self, params, spec: LutLinearSpec):
+        return quantize_model(params, self.cfg, spec)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,32 @@
+"""Production performance profiles: proven §Perf flags, applied when legal.
+
+``apply_perf_profile(cfg, "serve")`` turns on every optimization that the
+EXPERIMENTS.md §4 hillclimb validated for inference (ring window caches,
+int8 KV, bf16-operand attention, MLA/GQA prefill head-sharding), guarded by
+the same applicability conditions the dry-run variants used.  The paper-
+faithful baseline is the config without a profile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+def apply_perf_profile(cfg: ModelConfig, profile: str, *, tp: int = 16) -> ModelConfig:
+    if profile == "baseline":
+        return cfg
+    if profile != "serve":
+        raise ValueError(f"unknown profile {profile!r}")
+    kw = {}
+    if cfg.window:
+        kw["ring_window_cache"] = True
+    if cfg.attn_kind == "gqa" and cfg.n_kv_heads >= 1:
+        kw["kv_cache_int8"] = True
+    kw["attend_bf16"] = True
+    if cfg.attn_kind == "mla":
+        kw["mla_prefill_headshard"] = True
+    if cfg.attn_kind == "gqa" and cfg.n_heads % tp == 0:
+        kw["gqa_prefill_headshard"] = True
+    return dataclasses.replace(cfg, **kw)

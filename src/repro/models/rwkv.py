@@ -1,0 +1,187 @@
+"""RWKV6 "Finch" block: linear attention with data-dependent decay.
+
+Per head (dim P), with receptance r, key k, value v, decay w, bonus u:
+
+    wkv_t = s_{t-1} + diag(u) · (k_t ⊗ v_t)
+    out_t = r_t · wkv_t
+    s_t   = diag(w_t) · s_{t-1} + k_t ⊗ v_t          s: [P_k, P_v]
+
+``w_t`` is *data-dependent* (the Finch novelty): ``w = exp(-exp(w0 +
+lora_w(x)))``.  Token-shift mixes use the RWKV6 ddlerp with a small LoRA.
+Decode carries ``(x_prev, s)`` — O(1) state, which is what qualifies this
+arch for the 500k long-context decode cell.
+
+LoCaLUT applicability (DESIGN.md §5): the r/k/v/g/output projections and the
+channel-mix GEMMs quantize; the decay path and recurrence stay fp.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear
+
+Array = jax.Array
+
+_MIX_KEYS = ("r", "k", "v", "w", "g")
+
+
+def rwkv_dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    return cfg.d_model // hd, hd
+
+
+def rwkv_time_init(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    r = cfg.rwkv
+    n_heads, hd = rwkv_dims(cfg)
+    ks = jax.random.split(key, 12)
+    p = {
+        "mu": jnp.full((len(_MIX_KEYS), d), 0.5, jnp.float32),
+        "mix_a": jax.random.normal(ks[0], (d, r.mix_lora * len(_MIX_KEYS)), jnp.float32) * 0.01,
+        "mix_b": jax.random.normal(ks[1], (len(_MIX_KEYS), r.mix_lora, d), jnp.float32) * 0.01,
+        "wr": dense_init(ks[2], d, d),
+        "wk": dense_init(ks[3], d, d),
+        "wv": dense_init(ks[4], d, d),
+        "wg": dense_init(ks[5], d, d),
+        "wo": dense_init(ks[6], d, d),
+        "w0": jnp.full((d,), -0.6, jnp.float32),
+        "w_a": jax.random.normal(ks[7], (d, r.decay_lora), jnp.float32) * 0.01,
+        "w_b": jax.random.normal(ks[8], (r.decay_lora, d), jnp.float32) * 0.01,
+        "u": jax.random.normal(ks[9], (n_heads, hd), jnp.float32) * 0.1,
+        "ln_g": jnp.ones((d,), jnp.float32),
+        "ln_b": jnp.zeros((d,), jnp.float32),
+    }
+    return p
+
+
+def rwkv_channel_init(cfg: ModelConfig, key) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": dense_init(ks[0], d, f),
+        "wv": dense_init(ks[1], f, d),
+        "wr": dense_init(ks[2], d, d),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    n_heads, hd = rwkv_dims(cfg)
+    return {
+        "s": jnp.zeros((batch, n_heads, hd, hd), dtype),
+        "x_prev_t": jnp.zeros((batch, cfg.d_model), dtype),
+        "x_prev_c": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def _token_shift(x: Array, x_prev: Optional[Array]) -> Array:
+    """[B, S, D] -> previous token's x (0 / carried state at t=0)."""
+    if x.shape[1] == 1 and x_prev is not None:
+        return x_prev[:, None, :].astype(x.dtype)
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev is not None:
+        shifted = shifted.at[:, 0].set(x_prev.astype(x.dtype))
+    return shifted
+
+
+def rwkv_time_mix(
+    p: dict,
+    x: Array,
+    cfg: ModelConfig,
+    state: Optional[dict] = None,
+) -> tuple[Array, Optional[dict]]:
+    b, seq, d = x.shape
+    n_heads, hd = rwkv_dims(cfg)
+    r_cfg = cfg.rwkv
+    xp = _token_shift(x, state["x_prev_t"] if state is not None else None)
+    diff = xp - x
+    # ddlerp: per-target mix coefficient with a tiny LoRA on x.
+    base = x + diff * 0.5
+    lora = jnp.tanh(base @ p["mix_a"].astype(x.dtype)).reshape(
+        b, seq, len(_MIX_KEYS), r_cfg.mix_lora
+    )
+    mixes = []
+    for i, _ in enumerate(_MIX_KEYS):
+        mi = p["mu"][i].astype(x.dtype) + jnp.einsum(
+            "bsl,ld->bsd", lora[:, :, i], p["mix_b"][i].astype(x.dtype)
+        )
+        mixes.append(x + diff * mi)
+    xr, xk, xv, xw, xg = mixes
+
+    r = linear(p["wr"], xr).reshape(b, seq, n_heads, hd)
+    k = linear(p["wk"], xk).reshape(b, seq, n_heads, hd)
+    v = linear(p["wv"], xv).reshape(b, seq, n_heads, hd)
+    g = jax.nn.silu(linear(p["wg"], xg))
+    wdec = jnp.exp(
+        -jnp.exp(
+            p["w0"]
+            + (jnp.tanh(xw.astype(jnp.float32) @ p["w_a"]) @ p["w_b"])
+        )
+    ).reshape(b, seq, n_heads, hd)                       # [B,S,H,P] in (0,1)
+
+    u = p["u"]                                            # [H, P]
+    s0 = (
+        state["s"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+    )
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                          # [B,H,P] each
+        kv = k_t[..., None] * v_t[..., None, :]           # [B,H,Pk,Pv]
+        wkv = s + u[None, :, :, None] * kv
+        out_t = jnp.einsum("bhp,bhpq->bhq", r_t, wkv)
+        s_new = w_t[..., None] * s + kv
+        return s_new, out_t
+
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, wdec))
+    if seq == 1:
+        s_final, out = step(s0, (rf[:, 0], kf[:, 0], vf[:, 0], wf[:, 0]))
+        out = out[:, None]
+    else:
+        from repro.models.layers import chunked_scan
+
+        sf = lambda t: jnp.moveaxis(t, 1, 0)
+        s_final, outs = chunked_scan(step, s0, (sf(rf), sf(kf), sf(vf), sf(wf)))
+        out = jnp.moveaxis(outs, 0, 1)                    # [B,S,H,Pv]
+
+    out = out.reshape(b, seq, d)
+    # per-head group norm
+    mu = jnp.mean(out.reshape(b, seq, n_heads, hd), axis=-1, keepdims=True)
+    var = jnp.var(out.reshape(b, seq, n_heads, hd), axis=-1, keepdims=True)
+    out = ((out.reshape(b, seq, n_heads, hd) - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(
+        b, seq, d
+    )
+    out = out * p["ln_g"] + p["ln_b"]
+    y = linear(p["wo"], (out.astype(x.dtype)) * g)
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["s"] = s_final.astype(state["s"].dtype)
+        new_state["x_prev_t"] = x[:, -1, :].astype(state["x_prev_t"].dtype)
+    return y, new_state
+
+
+def rwkv_channel_mix(
+    p: dict,
+    x: Array,
+    cfg: ModelConfig,
+    state: Optional[dict] = None,
+) -> tuple[Array, Optional[dict]]:
+    xp = _token_shift(x, state["x_prev_c"] if state is not None else None)
+    xk = x + (xp - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (xp - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(linear(p["wk"], xk)))
+    y = jax.nn.sigmoid(linear(p["wr"], xr)) * linear(p["wv"], k)
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["x_prev_c"] = x[:, -1, :].astype(state["x_prev_c"].dtype)
+    return y, new_state

@@ -1,0 +1,156 @@
+"""Mamba2-style SSD block (zamba2's sequence mixer).
+
+State-space recurrence with a scalar decay per head:
+
+    s_t = exp(A · dt_t) · s_{t-1} + dt_t · (x_t ⊗ B_t)      s: [P, N]
+    y_t = s_t · C_t + D · x_t
+
+Prefill/train runs a ``lax.scan`` over the sequence (O(S) sequential — a
+chunked SSD kernel is a recorded §Perf candidate); decode is a single state
+update, which is why the 500k-context cell is O(1) memory for this family.
+
+LoCaLUT applicability note (DESIGN.md §5): the in/out projections are GEMMs
+and quantize; the recurrence itself is elementwise and stays bf16.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, linear
+
+Array = jax.Array
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def ssm_init(cfg: ModelConfig, key) -> dict:
+    s = cfg.ssm
+    d_inner, n_heads = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 3)
+    return {
+        # fused projection: [z, x, B, C, dt]
+        "in_proj": dense_init(
+            ks[0], cfg.d_model, 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+        ),
+        "out_proj": dense_init(ks[1], d_inner, cfg.d_model),
+        "conv_w": jax.random.normal(ks[2], (s.conv_width, conv_dim), jnp.float32)
+        * (1.0 / np.sqrt(s.conv_width)),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),      # A = -exp(a_log)
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    _, n_heads = ssm_dims(cfg)
+    return {
+        "ssd": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), dtype),
+        "conv": jnp.zeros(
+            (batch, s.conv_width - 1, ssm_dims(cfg)[0] + 2 * s.n_groups * s.d_state),
+            dtype,
+        ),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: Array):
+    s = cfg.ssm
+    d_inner, n_heads = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : 2 * d_inner + 2 * gn]
+    dt = proj[..., 2 * d_inner + 2 * gn :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array, history: Optional[Array]):
+    """Depthwise causal conv over [B, S, C]; history = trailing (width-1)."""
+    width = w.shape[0]
+    if history is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = history.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + b), xp[:, -(width - 1) :, :]
+
+
+def ssm_apply(
+    p: dict,
+    x: Array,                       # [B, S, D]
+    cfg: ModelConfig,
+    state: Optional[dict] = None,   # decode: carries ssd + conv history
+) -> tuple[Array, Optional[dict]]:
+    s = cfg.ssm
+    d_inner, n_heads = ssm_dims(cfg)
+    b, seq, _ = x.shape
+    proj = linear(p["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, proj)
+    hist = state["conv"] if state is not None else None
+    xbc, new_hist = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), hist)
+    gn = s.n_groups * s.d_state
+    xs = xbc[..., :d_inner].reshape(b, seq, n_heads, s.head_dim)
+    bmat = xbc[..., d_inner : d_inner + gn].reshape(b, seq, s.n_groups, s.d_state)
+    cmat = xbc[..., d_inner + gn :].reshape(b, seq, s.n_groups, s.d_state)
+    # broadcast groups over heads
+    rep = n_heads // s.n_groups
+    bmat = jnp.repeat(bmat, rep, axis=2)               # [B,S,H,N]
+    cmat = jnp.repeat(cmat, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                       # [H]
+    decay = jnp.exp(dt * a[None, None, :])                         # [B,S,H]
+
+    s0 = (
+        state["ssd"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, n_heads, s.head_dim, s.d_state), jnp.float32)
+    )
+
+    def step(carry, inp):
+        dec_t, dt_t, x_t, b_t, c_t = inp       # [B,H], [B,H], [B,H,P], [B,H,N], [B,H,N]
+        upd = (dt_t[..., None] * x_t)[..., None] * b_t[:, :, None, :]  # [B,H,P,N]
+        s_new = dec_t[..., None, None] * carry + upd
+        y_t = jnp.einsum("bhpn,bhn->bhp", s_new, c_t)
+        return s_new, y_t
+
+    xsf = xs.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+    if seq == 1:
+        s_final, y = step(s0, (decay[:, 0], dt[:, 0], xsf[:, 0], bf[:, 0], cf[:, 0]))
+        y = y[:, None]
+    else:
+        from repro.models.layers import chunked_scan
+
+        seq_first = lambda t: jnp.moveaxis(t, 1, 0)
+        s_final, ys = chunked_scan(
+            step, s0, (seq_first(decay), seq_first(dt), seq_first(xsf),
+                       seq_first(bf), seq_first(cf))
+        )
+        y = jnp.moveaxis(ys, 0, 1)                                  # [B,S,H,P]
+
+    y = y + p["d_skip"][None, None, :, None] * xsf
+    y = y.reshape(b, seq, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = linear(p["out_proj"], y)
+    new_state = (
+        {"ssd": s_final.astype(s0.dtype), "conv": new_hist}
+        if state is not None
+        else None
+    )
+    return out, new_state

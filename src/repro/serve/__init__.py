@@ -1,0 +1,1 @@
+"""Serving runtime: KV-cache management, prefill/decode, batched driver."""

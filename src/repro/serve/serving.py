@@ -1,0 +1,92 @@
+"""Serving: prefill + decode steps and a batched request driver.
+
+The paper's deployment regime (§V-B, §VI-J): LoCaLUT-quantized projections do
+the GEMMs; prefill processes the prompt, decode emits one token per step
+against the KV cache.  ``ServeEngine`` is the small-scale continuous-batching
+driver used by the examples; the jitted step functions are the objects the
+multi-pod dry-run lowers at scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+Array = jax.Array
+
+
+def make_prefill_step(model: Model, *, ctx=None):
+    def prefill_step(params, tokens, caches, prefix_embeds=None):
+        logits, caches = model.prefill(
+            params, tokens, caches, prefix_embeds=prefix_embeds, ctx=ctx
+        )
+        return logits, caches
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, *, ctx=None, greedy: bool = True):
+    """One decode step: (params, token [B,1], caches, pos) -> (next, caches)."""
+
+    def serve_step(params, token, caches, pos):
+        logits, caches = model.decode_step(params, token, caches, pos, ctx=ctx)
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int = 16
+    generated: Optional[list] = None
+
+
+class ServeEngine:
+    """Minimal batched serving loop (static batch slots, greedy decode)."""
+
+    def __init__(self, model: Model, params, *, batch: int, max_seq: int, ctx=None):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.ctx = ctx
+        self._prefill = jax.jit(make_prefill_step(model, ctx=ctx))
+        self._step = jax.jit(make_serve_step(model, ctx=ctx))
+
+    def generate(self, requests: list[Request]) -> list[list[int]]:
+        """Serve a list of equal-or-ragged prompts in fixed-size batches."""
+        out: list[list[int]] = []
+        for start in range(0, len(requests), self.batch):
+            chunk = requests[start : start + self.batch]
+            out.extend(self._generate_batch(chunk))
+        return out
+
+    def _generate_batch(self, chunk: list[Request]) -> list[list[int]]:
+        b = self.batch
+        plen = max(len(r.prompt) for r in chunk)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(chunk):
+            toks[i, plen - len(r.prompt) :] = r.prompt  # left-pad
+        caches = self.model.init_cache(b, self.max_seq, dtype=jnp.float32)
+        logits, caches = self._prefill(self.params, jnp.asarray(toks), caches)
+        token = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        max_new = max(r.max_new_tokens for r in chunk)
+        outs = [[] for _ in chunk]
+        for i, r in enumerate(chunk):
+            outs[i].append(int(token[i, 0]))
+        for t in range(max_new - 1):
+            token, caches = self._step(
+                self.params, token, caches, jnp.int32(plen + t)
+            )
+            for i, r in enumerate(chunk):
+                if len(outs[i]) < r.max_new_tokens:
+                    outs[i].append(int(token[i, 0]))
+        return outs

@@ -1,0 +1,150 @@
+"""Train step factory: next-token cross-entropy + AdamW, remat'd layers."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.train import optimizer as opt
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    step: Array
+
+
+def init_train_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params, opt=opt.init_opt_state(params), step=jnp.zeros((), jnp.int32)
+    )
+
+
+def cross_entropy(logits: Array, targets: Array) -> Array:
+    """Mean next-token xent; logits [B, S, V] (f32), targets [B, S] int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+_XENT_CHUNK = 256
+
+
+def chunked_head_xent(params, cfg: ModelConfig, hidden: Array, targets: Array) -> Array:
+    """LM head + xent in sequence chunks — [B,S,V] logits never materialize.
+
+    With a 256k vocab at 4k sequence the full-logit tensor is GBs per device;
+    a checkpointed chunk body keeps only the [B, chunk, D] hidden slice live
+    and recomputes chunk logits in backward.
+    """
+    from repro.models import transformer
+
+    b, s, _ = hidden.shape
+    if s % _XENT_CHUNK or s <= _XENT_CHUNK or cfg.vocab_size < 32768:
+        logits = transformer.lm_head(params, cfg, hidden)
+        return cross_entropy(logits.astype(jnp.float32), targets)
+    nc = s // _XENT_CHUNK
+    hc = jnp.moveaxis(hidden.reshape(b, nc, _XENT_CHUNK, -1), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, nc, _XENT_CHUNK), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        h_i, t_i = inp
+        logits = transformer.lm_head(params, cfg, h_i).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_i[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    from repro import flags
+
+    total, _ = jax.lax.scan(
+        body, jnp.zeros((), jnp.float32), (hc, tc), unroll=flags.scan_unroll()
+    )
+    return total / (b * s)
+
+
+def make_loss_fn(model: Model, *, ctx=None, aux_weight: float = 0.01, remat: bool = True):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]                      # [B, S+1]
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        hidden, _, aux = model.forward(
+            params, inp, prefix_embeds=batch.get("prefix_embeds"),
+            ctx=ctx, remat=remat, return_hidden=True,
+        )
+        if batch.get("prefix_embeds") is not None and not cfg.is_encdec:
+            hidden = hidden[:, cfg.frontend_seq :, :]  # drop image positions
+        loss = chunked_head_xent(params, cfg, hidden, tgt)
+        if cfg.moe is not None:
+            loss = loss + aux_weight * aux
+        return loss, {"xent": loss, "moe_aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: opt.AdamWConfig,
+    *,
+    ctx=None,
+    remat=True,
+    accum_steps: int = 1,
+):
+    """Train step factory.
+
+    ``accum_steps > 1`` splits the per-device batch into microbatches and
+    accumulates gradients in a scan — activation memory scales down by the
+    accumulation factor, which is what lets the 4k-seq train cells of the
+    largest configs fit a 16 GB HBM chip (EXPERIMENTS.md §Perf).
+    """
+    loss_fn = make_loss_fn(model, ctx=ctx, remat=remat)
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        micro = jax.tree.map(
+            lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:]),
+            batch,
+        )
+
+        def body(carry, mb):
+            (loss, extras), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            acc_loss, acc_g = carry
+            return (
+                acc_loss + loss / accum_steps,
+                jax.tree.map(lambda a, b: a + b / accum_steps, acc_g, g),
+            ), extras
+
+        zero_g = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params
+        )
+        (loss, grads), extras = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero_g), micro
+        )
+        extras = jax.tree.map(lambda x: x[-1], extras)
+        return (loss, extras), grads
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        (loss, extras), grads = grads_of(state.params, batch)
+        new_params, new_opt, metrics = opt.apply_updates(
+            state.params, grads, state.opt, opt_cfg
+        )
+        metrics.update(extras)
+        metrics["loss"] = loss
+        return (
+            TrainState(params=new_params, opt=new_opt, step=state.step + 1),
+            metrics,
+        )
+
+    return train_step

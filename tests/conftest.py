@@ -1,0 +1,21 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here — smoke
+tests and benchmarks must see the real single CPU device.  Distribution tests
+that need multiple devices spawn subprocesses with their own XLA_FLAGS
+(see tests/test_distribution.py).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+# Lock the backend to the real single CPU device BEFORE any test can import
+# repro.launch.dryrun (whose first lines set a 512-device XLA_FLAGS for its
+# own subprocess use — jax ignores it once initialized).
+jax.devices()
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,48 @@
+"""Data pipeline: determinism, restart replay, host sharding, prefetch."""
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+
+
+def test_counter_based_determinism():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    a = SyntheticLM(cfg).batch_at(13)
+    b = SyntheticLM(cfg).batch_at(13)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(cfg).batch_at(14)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_restart_replays_same_stream():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2)
+    pipe = SyntheticLM(cfg)
+    first = [b["tokens"] for _, b in zip(range(5), pipe.iterate(0))]
+    resumed = [b["tokens"] for _, b in zip(range(3), pipe.iterate(2))]
+    for a, b in zip(first[2:], resumed):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_host_sharding_disjoint():
+    cfg = DataConfig(vocab_size=1000, seq_len=8, global_batch=8, seed=3)
+    h0 = SyntheticLM(cfg, host_id=0, n_hosts=2).batch_at(0)
+    h1 = SyntheticLM(cfg, host_id=1, n_hosts=2).batch_at(0)
+    assert h0["tokens"].shape == (4, 9)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_prefetcher_delivers_in_order():
+    cfg = DataConfig(vocab_size=50, seq_len=4, global_batch=2)
+    pipe = SyntheticLM(cfg)
+    pf = Prefetcher(pipe.iterate(0), depth=2)
+    got = [next(pf)["tokens"] for _ in range(4)]
+    want = [pipe.batch_at(i)["tokens"] for i in range(4)]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), w)
+    pf.stop()
+
+
+def test_prefix_embeds_present_for_frontend():
+    cfg = DataConfig(vocab_size=50, seq_len=4, global_batch=2, prefix_seq=3, prefix_dim=8)
+    b = SyntheticLM(cfg).batch_at(0)
+    assert b["prefix_embeds"].shape == (2, 3, 8)

@@ -1,0 +1,101 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, engine, luts
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("bw", [1, 2, 4])
+@pytest.mark.parametrize(
+    "shape", [(1, 32, 16), (4, 64, 48), (10, 129, 200), (3, 256, 96)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lut_dequant_gemm_sweep(bw, shape, dtype):
+    b, k, f = shape
+    rng = np.random.default_rng(hash((bw, shape)) % 2**31)
+    w = jnp.asarray(rng.normal(size=(k, f)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, k)).astype(np.float32)).astype(dtype)
+    spec = api.LutLinearSpec(bw=bw, ba=4)
+    q = api.quantize_linear(w, spec)
+    y_ref = ref.lut_dequant_gemm_ref(
+        x.astype(jnp.float32), q.codes, q.scale, bw=bw, k=q.k, grid=spec.wspec().grid()
+    )
+    y = ops.lut_dequant_gemm(x, q.codes, q.scale, bw=bw, k=q.k)
+    # f32 tol covers K-block accumulation-order differences vs the fused ref
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_kw", [{}, dict(block_b=8, block_f=8, block_k=32)])
+def test_lut_dequant_gemm_block_sizes(block_kw):
+    rng = np.random.default_rng(0)
+    b, k, f = 5, 70, 30
+    w = jnp.asarray(rng.normal(size=(k, f)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, k)).astype(np.float32))
+    spec = api.LutLinearSpec(bw=2, ba=4)
+    q = api.quantize_linear(w, spec)
+    y_ref = ref.lut_dequant_gemm_ref(x, q.codes, q.scale, bw=2, k=q.k, grid=spec.wspec().grid())
+    y = ops.lut_dequant_gemm(x, q.codes, q.scale, bw=2, k=q.k, **block_kw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bw,ba,p", [(1, 3, 3), (1, 3, 4), (2, 2, 4), (4, 4, 2), (1, 1, 5)])
+def test_lut_stream_gemm_sweep(bw, ba, p):
+    pack = luts.build_lut_pack(bw, ba, p)
+    rng = np.random.default_rng(hash((bw, ba, p)) % 2**31)
+    m, k, n = 16, 3 * p + 1, 6   # deliberately ragged K
+    wc = jnp.asarray(rng.integers(0, 2**bw, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 2**ba, (k, n)).astype(np.int32))
+    want = engine.canonical_lut_gemm(wc, ac, pack)
+    got = ops.lut_stream_gemm_full(wc, ac, pack)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want).astype(np.float32),
+                               rtol=0, atol=0)
+
+
+def test_lut_stream_gemm_ref_oracle_consistency():
+    """ref.lut_stream_gemm_ref == engine path on the same prepared indices."""
+    import repro.core.packing as packing
+
+    bw, ba, p = 2, 2, 3
+    pack = luts.build_lut_pack(bw, ba, p)
+    rng = np.random.default_rng(3)
+    m, k, n = 8, 9, 5
+    wc = jnp.asarray(rng.integers(0, 2**bw, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 2**ba, (k, n)).astype(np.int32))
+    idx = engine.canonicalize_activations(ac, pack)
+    wp = packing.pack_index(wc.reshape(m, k // p, p), bw)
+    out = ref.lut_stream_gemm_ref(
+        wp, idx.msrank, idx.permid,
+        jnp.asarray(pack.canonical.astype(np.int32)),
+        jnp.asarray(pack.reordering.astype(np.int32)),
+    )
+    want = engine.canonical_lut_gemm(wc, ac, pack)
+    assert np.array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize(
+    "shape,kw",
+    [
+        ((2, 256, 4, 2, 64), {}),
+        ((1, 384, 8, 8, 32), dict(window=128)),
+        ((2, 128, 4, 1, 64), dict(softcap=30.0)),
+        ((1, 200, 2, 2, 64), {}),                 # ragged S (padding path)
+        ((1, 256, 4, 4, 64), dict(causal=False)),
+        ((1, 130, 2, 2, 64), dict(window=32)),
+    ],
+)
+def test_flash_attention_sweep(shape, kw):
+    from repro.kernels.flash_attention import flash_attention
+
+    b, s, h, hkv, hd = shape
+    rng = np.random.default_rng(hash((shape, tuple(kw))) % 2**31)
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+    out = flash_attention(q, k, v, **kw)
+    want = ref.flash_attention_ref(q, k, v, causal=kw.get("causal", True),
+                                   window=kw.get("window"), softcap=kw.get("softcap"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-4)

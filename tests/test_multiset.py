@@ -1,0 +1,67 @@
+"""Property tests for the canonicalization math (paper §IV-A/B, Eq. 1)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import multiset
+
+BITS = st.integers(min_value=1, max_value=4)
+PACK = st.integers(min_value=1, max_value=6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(ba=BITS, p=PACK)
+def test_rank_unrank_bijective(ba, p):
+    v = 1 << ba
+    ms = multiset.all_multisets(v, p)
+    assert ms.shape == (multiset.n_multisets(v, p), p)
+    # every row sorted
+    assert np.all(np.diff(ms, axis=1) >= 0)
+    ranks = multiset.multiset_rank_np(ms, v)
+    assert np.array_equal(np.sort(ranks), np.arange(ms.shape[0]))
+    # unrank inverts rank
+    for r in np.random.default_rng(0).choice(ms.shape[0], size=min(10, ms.shape[0]), replace=False):
+        assert np.array_equal(multiset.multiset_unrank_np(int(r), v, p), ms[r])
+
+
+@settings(max_examples=25, deadline=None)
+@given(ba=BITS, p=PACK, seed=st.integers(0, 2**16))
+def test_jnp_rank_matches_np(ba, p, seed):
+    v = 1 << ba
+    rng = np.random.default_rng(seed)
+    codes = np.sort(rng.integers(0, v, (7, p)), axis=1)
+    np_r = multiset.multiset_rank_np(codes, v)
+    j_r = np.asarray(multiset.multiset_rank(jnp.asarray(codes), v))
+    assert np.array_equal(np_r, j_r)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.integers(1, 6))
+def test_perm_ids_bijective(p):
+    perms = multiset.all_permutations(p)
+    assert perms.shape[0] == math.factorial(p)
+    ids = np.asarray(multiset.perm_id(jnp.asarray(perms)))
+    assert np.array_equal(ids, np.arange(perms.shape[0]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(ba=BITS, p=PACK, seed=st.integers(0, 2**16))
+def test_canonicalize_stable_sort(ba, p, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 1 << ba, (5, p)).astype(np.int32))
+    sorted_c, perm = multiset.canonicalize(codes)
+    assert np.all(np.diff(np.asarray(sorted_c), axis=-1) >= 0)
+    # sorted = codes[perm] along last axis
+    gathered = np.take_along_axis(np.asarray(codes), np.asarray(perm), axis=-1)
+    assert np.array_equal(gathered, np.asarray(sorted_c))
+
+
+def test_eq1_paper_reduction_rates():
+    """Paper §IV-A: b_a=3 -> 12.4x at p=4, 611.1x at p=7 (their W1A3 config)."""
+    assert 2 ** (3 * 4) / multiset.n_multisets(8, 4) == pytest.approx(12.41, abs=0.01)
+    assert 2 ** (3 * 7) / multiset.n_multisets(8, 7) == pytest.approx(611.06, abs=0.1)

@@ -1,0 +1,107 @@
+"""§Perf optimizations preserve semantics (ring KV cache, int8 KV cache)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import build_model
+
+
+def _decode_logits(cfg, seed=0, max_seq=32, prefix=6, total=14):
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, total), dtype=np.int32))
+    caches = model.init_cache(2, max_seq, dtype=jnp.float32)
+    pf, caches = model.prefill(params, toks[:, :prefix], caches)
+    outs = [pf[:, 0]]
+    for t in range(prefix, total):
+        lg, caches = model.decode_step(params, toks[:, t : t + 1], caches, jnp.int32(t))
+        outs.append(lg[:, 0])
+    return np.asarray(jnp.stack(outs, axis=1)), params, toks
+
+
+def test_ring_window_cache_matches_full_cache():
+    """gemma2-style local layers: ring-buffer decode == full-cache decode."""
+    base = get_config("gemma2-2b", smoke=True)     # window=8, pattern LG
+    ring = dataclasses.replace(base, ring_window_cache=True)
+    full_out, _, _ = _decode_logits(base)
+    ring_out, _, _ = _decode_logits(ring)
+    np.testing.assert_allclose(ring_out, full_out, rtol=3e-3, atol=3e-3)
+
+
+def test_ring_cache_is_smaller():
+    base = get_config("gemma2-2b", smoke=True)
+    ring = dataclasses.replace(base, ring_window_cache=True)
+    mb = build_model(base).init_cache(2, 32, dtype=jnp.float32)
+    mr = build_model(ring).init_cache(2, 32, dtype=jnp.float32)
+    nbytes = lambda c: sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c))
+    assert nbytes(mr) < nbytes(mb)
+
+
+def test_int8_kv_cache_close_to_fp():
+    base = get_config("chatglm3-6b", smoke=True)
+    q8 = dataclasses.replace(base, kv_cache_int8=True)
+    fp_out, _, _ = _decode_logits(base)
+    q8_out, _, _ = _decode_logits(q8)
+    # int8 KV introduces ~1e-2 relative noise on logits; trajectories align.
+    rel = np.linalg.norm(q8_out - fp_out) / np.linalg.norm(fp_out)
+    assert rel < 0.05, rel
+    # and the cache really is ~half the bytes
+    cb = build_model(base).init_cache(2, 32, dtype=jnp.bfloat16)
+    c8 = build_model(q8).init_cache(2, 32, dtype=jnp.bfloat16)
+    nbytes = lambda c: sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c))
+    assert nbytes(c8) < 0.8 * nbytes(cb)
+
+
+def test_mla_headshard_flag_is_semantics_preserving():
+    """The hint only adds sharding constraints; on 1 device it is a no-op."""
+    base = get_config("deepseek-v2-lite-16b", smoke=True)
+    base = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, capacity_factor=64.0)
+    )
+    hint = dataclasses.replace(base, mla_prefill_headshard=True)
+    a, _, _ = _decode_logits(base)
+    b, _, _ = _decode_logits(hint)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_attend_close_to_f32():
+    """Mixed-precision attention: small logit deviation, same trajectory."""
+    base = get_config("gemma2-2b", smoke=True)
+    bf = dataclasses.replace(base, attend_bf16=True)
+    a, _, _ = _decode_logits(base)
+    b, _, _ = _decode_logits(bf)
+    rel = np.linalg.norm(b - a) / np.linalg.norm(a)
+    assert rel < 0.05, rel
+
+
+def test_flash_attn_impl_matches_xla():
+    """attn_impl="flash" (Pallas kernel, interpret) == the XLA path."""
+    base = get_config("gemma2-2b", smoke=True)   # exercises window + softcap
+    flash = dataclasses.replace(base, attn_impl="flash")
+    import numpy as _np
+    rng = _np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, base.vocab_size, (2, 16), dtype=_np.int32))
+    m1, m2 = build_model(base), build_model(flash)
+    p = m1.init(jax.random.PRNGKey(0))
+    a, _, _ = m1.forward(p, toks)
+    b, _, _ = m2.forward(p, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-3)
+
+
+def test_serve_profile_preserves_decode_semantics():
+    """apply_perf_profile('serve') == baseline up to quantization noise."""
+    from repro.models.profiles import apply_perf_profile
+
+    base = get_config("gemma2-2b", smoke=True)
+    prof = apply_perf_profile(base, "serve", tp=2)
+    assert prof.ring_window_cache and prof.kv_cache_int8 and prof.attend_bf16
+    a, _, _ = _decode_logits(base)
+    b, _, _ = _decode_logits(prof)
+    rel = np.linalg.norm(b - a) / np.linalg.norm(a)
+    assert rel < 0.06, rel

@@ -1,0 +1,134 @@
+"""Performance model (Eq. 2–6) + UPMEM cost model vs the paper's claims."""
+
+import math
+
+import pytest
+
+from repro import hw
+from repro.core import luts, perfmodel, pim_cost
+
+
+def test_capacity_limits_match_paper_v_a():
+    """§V-A: W1A3 canonical p_local≈5 / p_dram≈8; packed 3 / 6."""
+    pl, pd = perfmodel.capacity_limits(1, 3, hw.UPMEM)
+    assert (pl, pd) == (5, 8)
+    assert luts.max_p_packed(1, 3, hw.UPMEM.buffer_lut_budget) == 3
+    assert luts.max_p_packed(1, 3, hw.UPMEM.bank_lut_budget) == 6
+
+
+def test_capacity_limits_match_paper_vi_i():
+    """§VI-I: W4A4 p_local = 2 ('a maximum packing degree of two fits')."""
+    pl, _ = perfmodel.capacity_limits(4, 4, hw.UPMEM)
+    assert pl == 2
+
+
+@pytest.mark.parametrize(
+    "bw,ba,m,expect_p,expect_stream",
+    [
+        (4, 4, 768, 2, False),    # Fig18: picks 2 buffer-resident
+        (4, 4, 3072, 3, True),    # Fig18: picks 3 with streaming
+        (2, 2, 768, 5, True),     # Fig18: the documented near-miss (5 not 4)
+    ],
+)
+def test_fig18_p_star_selection(bw, ba, m, expect_p, expect_stream):
+    plan = pim_cost.localut_plan(pim_cost.GemmShape(m, 768, 768), bw, ba)
+    assert plan.p_star == expect_p
+    assert plan.use_streaming == expect_stream
+
+
+def test_eq6_break_even_monotonic_in_bw():
+    """§IV-D: break-even M grows with b_w (LUT grows faster)."""
+    vals = []
+    for bw in (1, 2):
+        p_local, _ = perfmodel.capacity_limits(bw, 2, hw.UPMEM)
+        be = perfmodel.eq6_break_even_m(p_local + 1, p_local, bw, hw.UPMEM)
+        vals.append(be)
+    assert vals[1] > vals[0]
+
+
+def test_eq2_eq4_consistency():
+    """Buffer-resident (Eq.4) == Eq.2 with the streaming term removed."""
+    m, k, n, p = 256, 768, 64, 4
+    t2 = perfmodel.eq2_time(m, k, n, p, 1, hw.UPMEM)
+    t4 = perfmodel.eq4_time(m, k, n, p, hw.UPMEM)
+    stream_term = (2 ** (1 * p)) * (k * n / p) * hw.UPMEM.l_d
+    assert t2 == pytest.approx(t4 + stream_term)
+
+
+def _geomean_speedups():
+    ratios = {"naive_pim": [], "ltc": [], "op": []}
+    for mkn in [(768, 768, 128), (3072, 768, 128)]:
+        s = pim_cost.GemmShape(*mkn)
+        for bw, ba in [(1, 3), (1, 4), (2, 2), (4, 4)]:
+            t = {m: pim_cost.METHODS[m](s, bw, ba) for m in pim_cost.METHODS}
+            for k in ratios:
+                ratios[k].append(t[k] / t["localut"])
+    return {
+        k: math.exp(sum(math.log(x) for x in v) / len(v)) for k, v in ratios.items()
+    }
+
+
+def test_fig9_geomean_speedups_near_paper():
+    """Paper Fig.9: 2.87x vs Naive PIM, 1.77x vs LTC (geomean).  The cycle
+    model reproduces both within 10% (model-vs-measurement gap recorded in
+    EXPERIMENTS.md)."""
+    g = _geomean_speedups()
+    assert g["naive_pim"] == pytest.approx(2.87, rel=0.10)
+    assert g["ltc"] == pytest.approx(1.77, rel=0.10)
+
+
+def test_localut_never_slower_than_op_lc_rc():
+    """LoCaLUT adds streaming only when the model predicts a win."""
+    for mkn in [(128, 128, 32), (768, 768, 128), (3072, 768, 768)]:
+        s = pim_cost.GemmShape(*mkn)
+        for bw, ba in [(1, 3), (2, 2), (4, 4)]:
+            assert pim_cost.localut_time(s, bw, ba) <= pim_cost.op_lc_rc_time(
+                s, bw, ba
+            ) * (1 + 1e-9)
+
+
+def test_fig3_buffer_beats_dram_lut():
+    """§III-C: the local-buffer LUT outperforms the DRAM-bank LUT at every p."""
+    s = pim_cost.GemmShape(512, 512, 512)
+    for p in range(1, 7):
+        assert pim_cost.buffer_lut_time(s, 1, 3, p) < pim_cost.dram_bank_lut_time(
+            s, 1, 3, p
+        )
+
+
+def test_eq2_streaming_term_matches_simulated_traffic():
+    """Cross-validation: the perf model's Eq.2 streaming term equals the
+    byte-exact traffic simulated by the streamed engine (slices * entries):
+    Eq.2 counts 2^(bw*p) entries per (group, column) slice pair."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import engine, luts
+
+    bw, ba, p = 2, 2, 3
+    pack = luts.build_lut_pack(bw, ba, p)
+    m, k, n = 8, 12, 5
+    rng = np.random.default_rng(0)
+    wc = jnp.asarray(rng.integers(0, 2**bw, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 2**ba, (k, n)).astype(np.int32))
+    _, stats = engine.streamed_lut_gemm(wc, ac, pack, k_slices=2)
+    g = k // p
+    entries_streamed = stats.slices_streamed * pack.n_rows
+    assert entries_streamed == (2 ** (bw * p)) * g * n  # Eq.2 first-term count
+    # and the lookup count matches the Eq.2 second term numerator
+    assert stats.lookups == m * g * n
+
+
+def test_plan_time_consistent_with_simulated_engine():
+    """The auto-selected plan's predicted time == Eq.2/Eq.4 with the same
+    slice/lookup counts the functional engine actually performs."""
+    from repro import hw
+    from repro.core import perfmodel
+
+    plan = perfmodel.make_plan(perfmodel.PlanInputs(m=64, k=24, n=8, bw=2, ba=2))
+    dev = hw.UPMEM
+    if plan.use_streaming:
+        expect = perfmodel.eq2_time(64, 24, 8, plan.p_star, 2, dev)
+    else:
+        expect = perfmodel.eq4_time(64, 24, 8, plan.p_star, dev)
+    assert plan.t_predicted == pytest.approx(expect)
