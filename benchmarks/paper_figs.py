@@ -8,18 +8,57 @@ Each function returns CSV rows ``(name, us_per_call, derived)``.
 
 from __future__ import annotations
 
+import functools
 import math
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro import hw
-from repro.core import engine, luts, perfmodel, pim_cost
+from repro.core import engine, luts, multiset, perfmodel, pim_cost
 from repro.core.pim_cost import GemmShape
+
+# Populated by :func:`functional_gemm_timing`; ``benchmarks/run.py`` persists
+# it as BENCH_stream.json so the streamed-engine perf trajectory is tracked.
+LAST_STREAM_PAYLOAD: dict | None = None
 
 
 def _us(seconds: float) -> float:
     return seconds * 1e6
+
+
+@functools.lru_cache(maxsize=None)
+def _sampled_dedup_ratio(
+    bw: int, ba: int, p: int, k: int, n: int, window: int, seed: int = 0
+):
+    """Measured slice duplication of uniform random activations within a
+    ``window``-address streaming batch (the k slice pairs the buffer holds).
+
+    Needs only the canonicalization indices (multiset rank + permutation id),
+    not the LUTs themselves — usable at packing degrees whose reordering LUT
+    would be too large to materialize.  Dedup is only credited inside each
+    resident batch: a buffer holding ``window`` pairs cannot serve hits
+    across batches.
+    """
+    rng = np.random.default_rng(seed)
+    g = math.ceil(k / p)
+    groups = rng.integers(0, 1 << ba, (g, n, p))
+    perm = np.argsort(groups, axis=-1, kind="stable")
+    sorted_a = np.take_along_axis(groups, perm, axis=-1)
+    msr = multiset.multiset_rank_np(sorted_a, 1 << ba)
+    pid = multiset.perm_id_np_batch(perm)
+    key = msr.astype(np.int64) * math.factorial(p) + pid
+    flat = key.T.reshape(-1)            # seed walk order: g fast, n outer
+    total = flat.size
+    nfull = total // window
+    uniq = 0
+    if nfull:
+        rows = np.sort(flat[: nfull * window].reshape(nfull, window), axis=1)
+        uniq += nfull + int((np.diff(rows, axis=1) != 0).sum())
+    rem = flat[nfull * window:]
+    if rem.size:
+        uniq += int(np.unique(rem).size)
+    return uniq / max(total, 1)
 
 
 def fig3_candidates():
@@ -182,12 +221,20 @@ def fig13_k_sensitivity():
             t = pim_cost.bank_tile(s, dev)
             groups = math.ceil(t.k / p_fit)
             slices = groups * t.n
-            stream = (1 << (bw * p_fit)) * slices * dev.l_d
+            # Deduplicated streaming: distinct (canonical, reordering) column
+            # pairs within each k_sl-pair resident batch leave the bank once.
+            dedup = _sampled_dedup_ratio(bw, ba, p_fit, t.k, t.n, k_sl)
+            stream_flat = (1 << (bw * p_fit)) * slices * dev.l_d
+            stream = stream_flat * dedup
             batches = math.ceil(slices / k_sl)
             lookup = t.m * groups * t.n * dev.l_local
             total = stream + batches * batch_overhead + lookup
             t_by_k[k_sl] = total
-            rows.append((f"fig13/W{bw}A{ba}/k={k_sl}", _us(total), f"p={p_fit}"))
+            rows.append(
+                (f"fig13/W{bw}A{ba}/k={k_sl}", _us(total),
+                 f"p={p_fit};dedup={dedup:.3f};"
+                 f"flat_stream_us={_us(stream_flat + batches * batch_overhead + lookup):.2f}")
+            )
         best = min(t_by_k, key=t_by_k.get)
         rows.append((f"fig13/W{bw}A{ba}/best_k", "", f"k={best}"))
     return rows
@@ -211,6 +258,20 @@ def fig16_breakdown():
                  f"{shares['reordering_lut_access']/total*100:.1f}%;paper=6.9%"))
     rows.append(("fig16/index_calc_dominates", "",
                  f"{shares['index_calc']/total*100:.1f}%;paper=dominant"))
+    # Measured traffic of the tiled, deduplicated streaming engine — the
+    # dedup/buffer-hit shares complement the instruction-count breakdown.
+    import jax.numpy as jnp_
+
+    rng = np.random.default_rng(0)
+    pack = luts.build_lut_pack(1, 3, 4)
+    wc = jnp_.asarray(rng.integers(0, 2, (64, 96)).astype(np.int32))
+    ac = jnp_.asarray(rng.integers(0, 8, (96, 16)).astype(np.int32))
+    _, st = engine.streamed_lut_gemm(wc, ac, pack, tile_n=16)
+    rows.append(("fig16/stream_dedup", "",
+                 f"slices={st.slices_streamed}/{st.flat_slices};"
+                 f"buffer_hit_share={st.buffer_hits/max(st.flat_slices,1)*100:.1f}%"))
+    rows.append(("fig16/stream_reuse", "",
+                 f"lookups_per_slice={st.slice_reuse:.0f};M=64"))
     return rows
 
 
@@ -260,8 +321,22 @@ def fig19_scenarios():
     return rows
 
 
+_STREAM_BENCH_CFG = dict(bw=1, ba=3, p=4, tile_n=64)
+# fig13's default GEMM (3072, 768, 128) plus its per-bank M,K at three batch
+# widths — the shapes the slice-streaming engines are compared on.
+_STREAM_BENCH_SHAPES = [(192, 768, 1), (192, 768, 16), (192, 768, 128),
+                        (3072, 768, 128)]
+
+
 def functional_gemm_timing():
-    """Measured wall time of the exact LUT engines on CPU (functional layer)."""
+    """Measured wall time of the exact LUT engines on CPU (functional layer).
+
+    Also benchmarks the tiled, deduplicated slice-streaming engine against
+    the seed per-slice loop (``streamed_lut_gemm_looped``) at the fig13
+    default shapes, and stashes the numbers in :data:`LAST_STREAM_PAYLOAD`
+    for ``benchmarks/run.py`` to persist as ``BENCH_stream.json``.
+    """
+    global LAST_STREAM_PAYLOAD
     from benchmarks.common import time_fn
 
     rows = []
@@ -278,6 +353,50 @@ def functional_gemm_timing():
     ref = jax.jit(lambda w, a: engine.quantized_matmul_ref(w, a, pack.wgrid, pack.agrid))
     us_ref = time_fn(ref, wc, ac)
     rows.append((f"functional/int_matmul_ref/({m},{k},{n})", us_ref, "oracle"))
+
+    # --- streamed engine: seed per-slice loop vs tiled+deduplicated --------
+    cfg = _STREAM_BENCH_CFG
+    spack = luts.build_lut_pack(cfg["bw"], cfg["ba"], cfg["p"])
+    shapes_payload = []
+    for m, k, n in _STREAM_BENCH_SHAPES:
+        wc = jnp.asarray(rng.integers(0, 1 << cfg["bw"], (m, k)).astype(np.int32))
+        ac = jnp.asarray(rng.integers(0, 1 << cfg["ba"], (k, n)).astype(np.int32))
+        us_seed = time_fn(
+            lambda w, a: engine.streamed_lut_gemm_looped(w, a, spack)[0],
+            wc, ac, iters=1, warmup=1,
+        )
+        stats_box = []
+
+        def _tiled(w, a):
+            out, st_ = engine.streamed_lut_gemm(w, a, spack, tile_n=cfg["tile_n"])
+            stats_box[:] = [st_]
+            return out
+
+        us_tiled = time_fn(_tiled, wc, ac, iters=3, warmup=1)
+        st = stats_box[0]
+        speedup = us_seed / max(us_tiled, 1e-9)
+        shape_s = f"({m},{k},{n})"
+        rows.append((f"functional/streamed_seed/{shape_s}", us_seed,
+                     "seed per-slice loop"))
+        rows.append((f"functional/streamed_tiled/{shape_s}", us_tiled,
+                     f"dedup={st.dedup_ratio:.3f};reuse={st.slice_reuse:.0f}"))
+        rows.append((f"functional/streamed_speedup/{shape_s}", "",
+                     f"speedup={speedup:.1f}x"))
+        shapes_payload.append(dict(
+            m=m, k=k, n=n, seed_us=us_seed, tiled_us=us_tiled,
+            speedup=speedup, dedup_ratio=st.dedup_ratio,
+            slice_reuse=st.slice_reuse, slices_streamed=st.slices_streamed,
+            flat_slices=st.flat_slices, streamed_bytes=st.streamed_bytes,
+        ))
+    LAST_STREAM_PAYLOAD = dict(
+        section="functional",
+        config=dict(cfg),
+        shapes=shapes_payload,
+        headline=dict(
+            shape=list(_STREAM_BENCH_SHAPES[-1]),
+            speedup=shapes_payload[-1]["speedup"],
+        ),
+    )
     return rows
 
 

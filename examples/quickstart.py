@@ -34,7 +34,8 @@ streamed, stats = engine.streamed_lut_gemm(wcodes, acodes, pack, k_slices=2)
 assert np.array_equal(np.asarray(lut_out), np.asarray(oracle))
 assert np.array_equal(np.asarray(streamed), np.asarray(oracle))
 print(f"\nLUT GEMM bit-exact vs oracle ({M}x{K}x{N}); slice streaming moved "
-      f"{stats.streamed_bytes:,} LUT bytes, reuse={stats.slice_reuse:.0f}x")
+      f"{stats.streamed_bytes:,} LUT bytes ({stats.slices_streamed}/"
+      f"{stats.flat_slices} slices after dedup), reuse={stats.slice_reuse:.0f}x")
 
 # --- 3. the perf model picks p* and the execution strategy -------------------
 plan = perfmodel.make_plan(perfmodel.PlanInputs(m=3072, k=768, n=128, bw=1, ba=3))

@@ -6,6 +6,7 @@ Layers (bottom-up):
 * :mod:`repro.core.packing`   — code packing / bit-packed weight storage
 * :mod:`repro.core.multiset`  — canonicalization math (multiset ranks, Lehmer ids)
 * :mod:`repro.core.luts`      — packed / canonical / reordering LUT builders
+* :mod:`repro.core.stream_plan` — tiled, deduplicated slice-streaming planner
 * :mod:`repro.core.engine`    — exact LUT-GEMM execution engines
 * :mod:`repro.core.perfmodel` — paper Eq. 2–6 p*/streaming auto-selection
 * :mod:`repro.core.pim_cost`  — UPMEM cycle cost model (paper figures)

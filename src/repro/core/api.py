@@ -11,6 +11,10 @@ codes** plus per-output-channel scales; three execution paths share it:
 * ``lut``      — paper-faithful path: activation quantization → LUT
                  canonicalization → reordering LUT → canonical-LUT lookups
                  (bit-exact integer semantics, :mod:`repro.core.engine`).
+* ``stream``   — paper-faithful §IV-C path: tiled, deduplicated LUT slice
+                 streaming (:func:`repro.core.engine.streamed_lut_gemm`);
+                 same numerics as ``lut``, plus simulated DRAM→buffer
+                 traffic stats (:func:`stream_stats_for`).
 * ``pallas``   — fused TPU kernel (:mod:`repro.kernels`), same numerics as
                  ``dequant``.
 
@@ -42,9 +46,10 @@ class LutLinearSpec:
     bw: int = 2
     ba: int = 4
     p: Optional[int] = None        # None -> perf-model auto-selection
-    mode: str = "dequant"          # "dequant" | "lut" | "pallas"
+    mode: str = "dequant"          # "dequant" | "lut" | "stream" | "pallas"
     w_kind: str = "int"
     a_kind: str = "int"
+    tile_n: Optional[int] = None   # stream mode: activation columns per tile
 
     def wspec(self) -> QuantSpec:
         return QuantSpec(self.bw, self.w_kind, axis=1)  # per-output-channel
@@ -114,6 +119,8 @@ def apply_linear(q: QuantizedLinear, x: Array, *, interpret: bool = True) -> Arr
         y = _dequant_matmul(q, x)
     elif mode == "lut":
         y = _lut_matmul(q, x)
+    elif mode == "stream":
+        y, _ = _stream_matmul(q, x)
     elif mode == "pallas":
         from repro.kernels import ops  # local import: kernels are optional
 
@@ -154,6 +161,28 @@ def _lut_matmul(q: QuantizedLinear, x: Array) -> Array:
     o = engine.canonical_lut_gemm(wcodes, acodes, pack)             # [F, B] int32
     y = o.astype(jnp.float32) * q.scale[:, None] * ascale
     return y.T.reshape(x.shape[:-1] + (q.f,)).astype(x.dtype)
+
+
+def _stream_matmul(q: QuantizedLinear, x: Array) -> tuple[Array, engine.StreamStats]:
+    """§IV-C path: tiled, deduplicated slice streaming (bit-exact vs ``lut``)."""
+    spec = q.spec
+    xf = x.reshape(-1, x.shape[-1])                                 # [B, K]
+    acodes, ascale = quantize(xf.T, spec.aspec())                   # [K, B]
+    wcodes = packing.unpack_bits(q.codes, spec.bw)[:, : q.k]        # [F, K]
+    p = spec.p or perfmodel.make_plan(
+        perfmodel.PlanInputs(m=q.f, k=q.k, n=xf.shape[0], bw=spec.bw, ba=spec.ba)
+    ).p_star
+    pack = _lut_pack_cache(spec.bw, spec.ba, p, spec.w_kind, spec.a_kind)
+    o, stats = engine.streamed_lut_gemm(wcodes, acodes, pack, tile_n=spec.tile_n)
+    y = o.astype(jnp.float32) * q.scale[:, None] * ascale
+    return y.T.reshape(x.shape[:-1] + (q.f,)).astype(x.dtype), stats
+
+
+def stream_stats_for(q: QuantizedLinear, x: Array) -> engine.StreamStats:
+    """Simulated DRAM→buffer traffic of serving ``x`` through ``q`` with the
+    slice-streaming dataflow (regardless of ``q.spec.mode``)."""
+    _, stats = _stream_matmul(q, x)
+    return stats
 
 
 @functools.lru_cache(maxsize=64)

@@ -7,9 +7,13 @@ path produces the identical int32 result as the quantized matmul oracle):
 * :func:`canonical_lut_gemm`  — + LUT canonicalization + reordering LUT
                                  (§IV-A/B, "OP+LC+RC")
 * :func:`streamed_lut_gemm`   — + LUT slice streaming dataflow (§IV-C,
-                                 "LoCaLUT"); additionally returns simulated
-                                 DRAM→buffer traffic statistics consumed by
-                                 the UPMEM cost model.
+                                 "LoCaLUT"), tiled + deduplicated via
+                                 :mod:`repro.core.stream_plan`; additionally
+                                 returns simulated DRAM→buffer traffic
+                                 statistics consumed by the UPMEM cost model.
+* :func:`streamed_lut_gemm_looped` — the seed per-slice Python loop, kept as
+                                 the benchmark baseline and equivalence
+                                 oracle for the tiled engine.
 
 GEMM convention matches the paper: ``O[M,N] = W[M,K] · A[K,N]`` with
 ``W`` codes from a ``bw``-bit grid and ``A`` codes from a ``ba``-bit grid.
@@ -27,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import multiset, packing
+from repro.core import multiset, packing, stream_plan
 from repro.core.luts import LutPack
 from repro.core.quantize import zero_code
 
@@ -36,15 +40,21 @@ Array = jax.Array
 
 def _pad_groups(wcodes: Array, acodes: Array, p: int, wgrid, agrid):
     """Pad K to a multiple of p with fixed codes; return padded arrays plus
-    the exact scalar correction ``n_pad * wgrid[cw] * agrid[ca]``."""
+    the exact scalar correction ``n_pad * wgrid[cw] * agrid[ca]``.
+
+    The correction is computed in the grids' own dtype: integer grids yield a
+    Python int (bit-exact paths), float grids (fp4/fp8 packs) a Python float —
+    truncating through ``int()`` would corrupt float-grid pad values.
+    """
     k = wcodes.shape[1]
     pad = (-k) % p
     if pad == 0:
         return wcodes, acodes, 0
-    cw, ca = zero_code(np.asarray(wgrid)), zero_code(np.asarray(agrid))
+    wg, ag = np.asarray(wgrid), np.asarray(agrid)
+    cw, ca = zero_code(wg), zero_code(ag)
     wcodes = jnp.pad(wcodes, ((0, 0), (0, pad)), constant_values=cw)
     acodes = jnp.pad(acodes, ((0, pad), (0, 0)), constant_values=ca)
-    corr = pad * int(np.asarray(wgrid)[cw]) * int(np.asarray(agrid)[ca])
+    corr = (pad * wg[cw] * ag[ca]).item()
     return wcodes, acodes, corr
 
 
@@ -98,6 +108,28 @@ def canonicalize_activations(acodes: Array, pack: LutPack) -> CanonIndices:
     return CanonIndices(msrank=msr, permid=pid, corr=0)
 
 
+def canonicalize_activations_np(acodes: np.ndarray, pack: LutPack) -> CanonIndices:
+    """Host-side numpy twin of :func:`canonicalize_activations`.
+
+    The streamed engine simulates the host→PIM dataflow entirely in numpy;
+    going through jnp here would pay per-op dispatch latency on arrays the
+    engine immediately converts back to host memory.
+    """
+    p, v = pack.p, 1 << pack.ba
+    a = np.asarray(acodes)
+    k, n = a.shape
+    pad = (-k) % p
+    if pad:
+        a = np.pad(a, ((0, pad), (0, 0)), constant_values=zero_code(pack.agrid))
+    g = a.shape[0] // p
+    groups = a.reshape(g, p, n).transpose(0, 2, 1)                        # [G,N,p]
+    perm = np.argsort(groups, axis=-1, kind="stable")
+    sorted_a = np.take_along_axis(groups, perm, axis=-1)
+    msr = multiset.multiset_rank_np(sorted_a, v).astype(np.int64)         # [G,N]
+    pid = multiset.perm_id_np_batch(perm)                                 # [G,N]
+    return CanonIndices(msrank=msr, permid=pid, corr=0)
+
+
 def canonical_lut_gemm(
     wcodes: Array,
     acodes: Array,
@@ -113,27 +145,45 @@ def canonical_lut_gemm(
     g = k // p
     wpacked = packing.pack_index(wcodes.reshape(m, g, p), pack.bw)        # [M,G]
     reorder = jnp.asarray(pack.reordering.astype(np.int32))
-    canon = jnp.asarray(pack.canonical.astype(pack.canonical.dtype))
+    canon = jnp.asarray(pack.canonical)
     # step 3 (paper Fig. 5): reordering-LUT lookup -> canonical weight code
     wcanon = reorder[wpacked[:, :, None], idx.permid[None, :, :]]         # [M,G,N]
-    # step 4-5: canonical-LUT lookup + accumulate
+    # step 4-5: canonical-LUT lookup + accumulate.  Integer packs accumulate
+    # in int32 (bit-exact); float packs stay in their own dtype.
+    acc = jnp.int32 if pack.canonical.dtype.kind in "iu" else canon.dtype
     vals = canon[wcanon, idx.msrank[None, :, :]]                          # [M,G,N]
-    return jnp.sum(vals.astype(jnp.int32), axis=1) - corr
+    return jnp.sum(vals, axis=1, dtype=acc) - corr
 
 
 @dataclasses.dataclass
 class StreamStats:
-    """Simulated DRAM→buffer traffic of the slice-streaming dataflow."""
+    """Simulated DRAM→buffer traffic of the slice-streaming dataflow.
 
-    slices_streamed: int = 0          # canonical+reordering column pairs
+    ``slices_streamed`` counts *deduplicated* (canonical, reordering) column
+    pairs: within a tile each distinct pair is streamed once and every
+    further address hitting it is a ``buffer_hits`` entry.  ``flat_slices``
+    is the undeduplicated (group, column) address count — what the seed
+    dataflow streamed and what the paper's Eq. 2 first term models.
+    """
+
+    slices_streamed: int = 0          # deduped canonical+reordering pairs
+    flat_slices: int = 0              # undeduped (g, n) addresses
+    buffer_hits: int = 0              # addresses served from the buffer
+    stream_batches: int = 0           # DMA batches of <= k_slices pairs
+    tiles: int = 0                    # activation-column tiles walked
     canonical_bytes: int = 0
     reordering_bytes: int = 0
     lookups: int = 0                  # canonical-LUT lookups (== reorder lookups)
-    slice_reuse: float = 0.0          # lookups per streamed slice (M if perfect)
+    slice_reuse: float = 0.0          # lookups per streamed slice (>= M)
 
     @property
     def streamed_bytes(self) -> int:
         return self.canonical_bytes + self.reordering_bytes
+
+    @property
+    def dedup_ratio(self) -> float:
+        """slices_streamed / flat_slices in (0, 1]."""
+        return self.slices_streamed / max(self.flat_slices, 1)
 
 
 def streamed_lut_gemm(
@@ -142,15 +192,110 @@ def streamed_lut_gemm(
     pack: LutPack,
     *,
     k_slices: int = 2,
+    tile_n: Optional[int] = None,
 ) -> tuple[Array, StreamStats]:
-    """LUT slice streaming (§IV-C): LUT-stationary dataflow.
+    """Tiled, deduplicated LUT slice streaming (§IV-C): LUT-stationary dataflow.
 
-    The canonical/reordering LUTs live "in DRAM" (here: host arrays); only the
-    columns addressed by the current ``k_slices`` activation groups are
-    "streamed" into the working set and reused across **all M weight rows**
-    before advancing (paper Fig. 7).  Numerically identical to
-    :func:`canonical_lut_gemm`; additionally reports the traffic the real
-    device would see, which :mod:`repro.core.pim_cost` converts to time.
+    The canonical/reordering LUTs live "in DRAM" (here: host arrays).  The
+    activation columns are tiled ``tile_n`` wide (default: one tile spanning
+    all N); per tile the :mod:`repro.core.stream_plan` planner computes the
+    *unique* slice-pair set, each pair is streamed once, and the whole tile is
+    evaluated as a vectorized gather-compose — the reordering lookup is folded
+    into the canonical gather (``canon[reorder[wpk, pid], msr]``) at the slice
+    level, then all M weight rows gather from the composed buffer (paper
+    Fig. 7 reuse).  No Python per-slice loop remains; the only host loop is
+    over tiles.  Numerically identical to :func:`canonical_lut_gemm`;
+    additionally reports the traffic the real device would see, which
+    :mod:`repro.core.pim_cost` converts to time.  ``k_slices`` sets the DMA
+    batch size used for ``stream_batches`` accounting (paper Fig. 13's k).
+    """
+    if k_slices < 1:
+        raise ValueError(f"k_slices must be >= 1, got {k_slices}")
+    p = pack.p
+    wc = np.asarray(wcodes)
+    ac = np.asarray(acodes)
+    wg, ag = np.asarray(pack.wgrid), np.asarray(pack.agrid)
+    k = wc.shape[1]
+    pad = (-k) % p
+    corr = 0
+    if pad:
+        cw, ca = zero_code(wg), zero_code(ag)
+        wc = np.pad(wc, ((0, 0), (0, pad)), constant_values=cw)
+        ac = np.pad(ac, ((0, pad), (0, 0)), constant_values=ca)
+        corr = (pad * wg[cw] * ag[ca]).item()
+    idx = canonicalize_activations_np(ac, pack)
+    m = wc.shape[0]
+    n = ac.shape[1]
+    g = wc.shape[1] // p
+    wpk = packing.pack_index_np(wc.reshape(m, g, p), pack.bw).astype(np.int32)
+    reorder = pack.reordering
+    canon = pack.canonical
+    int_pack = canon.dtype.kind in "iu"
+    acc_dtype = np.int64 if int_pack else np.float64
+
+    plan = stream_plan.plan_stream(idx.msrank, idx.permid, tile_n=tile_n)
+    r = pack.n_rows
+    # The one-hot BLAS contraction is exact iff every partial sum stays below
+    # 2^24 (f32 integer exactness); huge R x G one-hots also stop paying off.
+    bound = g * p * float(np.max(np.abs(wg))) * float(np.max(np.abs(ag)))
+    use_matmul = (
+        int_pack and g > 0 and bound < 2.0**24 and m * g * r <= 32_000_000
+    )
+    if use_matmul:
+        onehot = np.zeros(m * g * r, dtype=np.float32)
+        onehot[np.arange(m * g, dtype=np.int64) * r + wpk.ravel()] = 1.0
+        onehot = onehot.reshape(m, g * r)                          # [M, G*R]
+
+    out = np.empty((m, n), dtype=acc_dtype)
+    stats = StreamStats()
+    rbytes = reorder.dtype.itemsize
+    cbytes = canon.dtype.itemsize
+
+    for tile in plan.tiles:
+        # --- stream: load each distinct canonical + reordering column once -
+        rbuf = reorder[:, tile.slice_pid]                          # [R, S]
+        cbuf = canon[:, tile.slice_ms]                             # [R, S]
+        # --- compose: fold the reordering lookup into the canonical gather
+        # index *per slice* (R*S work instead of M*G*NT):
+        #   composed[r, s] = canon[reorder[r, pid_s], ms_s]
+        composed = np.take_along_axis(cbuf, rbuf.astype(np.int64), axis=0)
+        # --- reuse: all M weight rows hit the composed buffer --------------
+        if use_matmul:
+            # Exact one-hot contraction on BLAS: out[m, nl] = sum_g
+            # composed[wpk[m, g], slot[g, nl]].
+            c2 = composed[:, tile.slot]                            # [R, G, NT]
+            c2 = c2.transpose(1, 0, 2).astype(np.float32).reshape(g * r, -1)
+            out[:, tile.n0 : tile.n1] = onehot @ c2
+        else:
+            vals = composed[wpk[:, :, None], tile.slot[None, :, :]]  # [M,G,NT]
+            out[:, tile.n0 : tile.n1] = vals.sum(axis=1, dtype=acc_dtype)
+        s = tile.n_slices
+        stats.slices_streamed += s
+        stats.buffer_hits += tile.buffer_hits
+        stats.stream_batches += -(-s // k_slices)
+        stats.canonical_bytes += s * r * cbytes
+        stats.reordering_bytes += s * r * rbytes
+        stats.lookups += m * tile.flat_slices
+    stats.flat_slices = plan.flat_slices
+    stats.tiles = len(plan.tiles)
+    stats.slice_reuse = stats.lookups / max(stats.slices_streamed, 1)
+    out_dtype = np.int32 if int_pack else np.float32
+    return jnp.asarray((out - corr).astype(out_dtype)), stats
+
+
+def streamed_lut_gemm_looped(
+    wcodes: Array,
+    acodes: Array,
+    pack: LutPack,
+    *,
+    k_slices: int = 2,
+) -> tuple[Array, StreamStats]:
+    """Seed implementation of §IV-C: flat (g, n) walk, one Python iteration
+    per slice, no deduplication.
+
+    Kept as the benchmark baseline for :func:`streamed_lut_gemm` (see
+    ``benchmarks/paper_figs.py`` ``functional`` section) and as an independent
+    equivalence oracle in the tests.
     """
     p = pack.p
     wcodes, acodes, corr = _pad_groups(wcodes, acodes, p, pack.wgrid, pack.agrid)
@@ -182,6 +327,7 @@ def streamed_lut_gemm(
             canon_slices[(gi, ni)] = canon[:, msr[gi, ni]]        # [R]
             reorder_slices[(gi, ni)] = reorder[:, pid[gi, ni]]    # [R]
         stats.slices_streamed += len(chunk)
+        stats.stream_batches += 1
         stats.canonical_bytes += len(chunk) * r * cbytes
         stats.reordering_bytes += len(chunk) * r * rbytes
         # --- reuse: all M weight rows hit the buffered slices --------------
@@ -189,5 +335,7 @@ def streamed_lut_gemm(
             wcanon = reorder_slices[(gi, ni)][wpk[:, gi]]          # [M]
             out[:, ni] += canon_slices[(gi, ni)][wcanon].astype(np.int64)
             stats.lookups += m
+    stats.flat_slices = g * n
+    stats.tiles = 1
     stats.slice_reuse = stats.lookups / max(stats.slices_streamed, 1)
     return jnp.asarray((out - corr).astype(np.int32)), stats

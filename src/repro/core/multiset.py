@@ -104,6 +104,24 @@ def perm_id_np(perm: np.ndarray) -> int:
     return pid
 
 
+def perm_id_np_batch(perm: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`perm_id_np`: [..., p] permutations -> [...] ids.
+
+    Host-side twin of the jnp :func:`perm_id` (same Lehmer convention); used
+    by the streamed engine's numpy canonicalization path.
+    """
+    perm = np.asarray(perm)
+    p = perm.shape[-1]
+    facts = np.array(
+        [math.factorial(p - 1 - i) for i in range(p)], dtype=np.int64
+    )
+    # smaller[i] = #{j > i : perm[j] < perm[i]}
+    less = perm[..., :, None] > perm[..., None, :]
+    upper = np.triu(np.ones((p, p), dtype=bool), k=1)
+    smaller = (less & upper).sum(axis=-1)
+    return (smaller @ facts).astype(np.int32)
+
+
 def all_permutations(p: int) -> np.ndarray:
     """[p!, p] permutation arrays, row i = permutation with Lehmer id i."""
     out = np.zeros((math.factorial(p), p), dtype=np.int32)

@@ -38,9 +38,18 @@ def unpack_index(idx, bits: int, p: int):
 
 
 def pack_index_np(codes: np.ndarray, bits: int) -> np.ndarray:
+    """[..., p] int codes -> [...] packed integer index (int64).
+
+    Codes occupy disjoint bit ranges, so the shift-accumulate is an OR; the
+    short loop over p avoids materializing an int64 [..., p] temporary (this
+    sits on the streamed engine's per-call path for large weight matrices).
+    """
+    codes = np.asarray(codes)
     p = codes.shape[-1]
-    shifts = np.arange(p, dtype=np.int64) * bits
-    return np.sum(codes.astype(np.int64) << shifts, axis=-1).astype(np.int64)
+    out = codes[..., 0].astype(np.int64)
+    for j in range(1, p):
+        out |= codes[..., j].astype(np.int64) << (bits * j)
+    return out
 
 
 def unpack_index_np(idx: np.ndarray, bits: int, p: int) -> np.ndarray:

@@ -4,8 +4,10 @@
   (value-LUT decode in VMEM + MXU matmul; the bandwidth↔computation
   re-instantiation of the paper's tradeoff).
 * :mod:`repro.kernels.lut_stream_gemm` — paper-faithful canonical-LUT slice
-  streaming (scalar-prefetched data-dependent column fetch HBM→VMEM,
-  LUT-stationary reuse, lookups as MXU one-hot contractions).
+  streaming, tiled v2 (scalar-prefetched data-dependent column fetch
+  HBM→VMEM for NT slice pairs per step, LUT-stationary reuse, reordering
+  lookup composed into the canonical gather index, one int32 MXU one-hot
+  contraction per tile step).
 * :mod:`repro.kernels.flash_attention` — online-softmax attention (scores
   never leave VMEM; the structural fix for the prefill memory roofline).
 * :mod:`repro.kernels.ops` — jitted wrappers / host-side preparation.

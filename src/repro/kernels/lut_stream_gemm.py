@@ -1,27 +1,33 @@
-"""TPU Pallas kernel: paper-faithful canonical-LUT **slice streaming** GEMM.
+"""TPU Pallas kernel v2: tiled canonical-LUT **slice streaming** GEMM.
 
 This kernel maps the paper's §IV-C dataflow natively onto the TPU memory
 hierarchy:
 
 * the canonical LUT and the reordering LUT live in **HBM** (the "DRAM bank"),
-* each grid step streams exactly the two LUT *columns* addressed by the
-  current activation group into **VMEM** (the "local buffer") via
-  **scalar-prefetched, data-dependent BlockSpec index maps** — Pallas's
-  pipelined block fetch plays the role of the paper's slice streaming, with
-  double-buffering as the overlap the paper gets from its 3-stage pipelined
-  bank access,
-* the streamed slice is then reused across **all M weight rows** before the
+* the grid runs over ``(N-tiles, G)``; each step streams the ``NT``
+  canonical-LUT columns and ``NT`` reordering-LUT columns addressed by the
+  tile's activation columns at K-group ``g`` into **VMEM** (the "local
+  buffer") via **scalar-prefetched, data-dependent BlockSpec index maps** —
+  Pallas's pipelined block fetch plays the role of the paper's slice
+  streaming, with double-buffering as the overlap the paper gets from its
+  3-stage pipelined bank access,
+* the streamed slices are reused across **all M weight rows** before the
   grid advances (LUT-stationary reuse, paper Fig. 7).
 
-Lookups are executed on the **MXU as one-hot contractions** (no gathers):
+v2 replaces v1's per-lookup ``[R, R]`` one-hot permutation matmul with
+**index composition**: the reordering lookup is folded into the canonical
+gather at the slice level,
 
-    perm   = onehot(reorder_col)          [R, R]   (reordering-LUT lookup)
-    permuted_slice = perm @ canon_col     [R, 1]
-    vals   = onehot(w_codes) @ permuted_slice    [M, 1]
-    out[:, n] += vals                              (accumulate over G)
+    composed[r, t] = canon_cols[reorder_cols[r, t], t]        # [R, NT] gather
 
-Grid = (N, G): one (activation column, K-group) slice pair per step; the
-output column block is revisited across G with an f32/int32 accumulator.
+so only one ``[M, R]·[R, NT]`` one-hot contraction remains per grid step,
+accumulated in **int32** (bit-exact for integer LUT packs):
+
+    out[:, tile] += onehot(w_codes) @ composed                # [M, NT]
+
+v1 streamed one column pair per step and burned an ``[R, R]`` matmul plus an
+f32 accumulator per lookup; v2 amortizes the weight one-hot over NT columns
+and does no permutation matmul at all.
 """
 
 from __future__ import annotations
@@ -37,84 +43,107 @@ Array = jax.Array
 
 
 def _stream_kernel_body(
-    msrank_ref,      # scalar-prefetch [G*N] int32
-    permid_ref,      # scalar-prefetch [G*N] int32
-    wpacked_ref,     # [M, 1] int32 (block: column g)
-    canon_ref,       # [R, 1] streamed canonical-LUT slice
-    reorder_ref,     # [R, 1] streamed reordering-LUT slice
-    out_ref,         # [M, 1] accumulator (block: column n)
-    *,
+    ms_ref,          # scalar-prefetch [T*G*NT] int32 (unused in body; drives specs)
+    pid_ref,         # scalar-prefetch [T*G*NT] int32 (unused in body; drives specs)
+    wpacked_ref,     # [M, 1] int32 (block: weight column g)
+    *refs,           # NT canonical [R,1] + NT reordering [R,1] slices + out
     r: int,
-    ng: int,
+    nt: int,
 ):
+    canon_refs = refs[:nt]
+    reorder_refs = refs[nt : 2 * nt]
+    out_ref = refs[2 * nt]
     g = pl.program_id(1)
 
     @pl.when(g == 0)
     def _zero():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    rcol = reorder_ref[...][:, 0]                          # [R] int32 codes
-    ccol = canon_ref[...][:, 0].astype(jnp.float32)        # [R]
-    wcol = wpacked_ref[...][:, 0]                          # [M] int32
-
-    iota_r = jax.lax.broadcasted_iota(jnp.int32, (r, r), 1)
-    # reordering-LUT lookup on the MXU: permuted[c] = ccol[rcol[c]]
-    perm = (rcol[:, None] == iota_r).astype(jnp.float32)   # [R, R]
-    permuted = jax.lax.dot_general(
-        perm, ccol[:, None], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )                                                      # [R, 1]
-    # canonical-LUT lookup on the MXU: vals[m] = permuted[wcol[m]]
+    ccols = jnp.concatenate([c[...] for c in canon_refs], axis=1)      # [R, NT]
+    rcols = jnp.concatenate([c[...] for c in reorder_refs], axis=1)    # [R, NT]
+    # Index composition (no [R, R] one-hot): fold the reordering lookup into
+    # the canonical gather — composed[r, t] = ccols[rcols[r, t], t].
+    composed = jnp.take_along_axis(ccols, rcols, axis=0)               # [R, NT]
+    wcol = wpacked_ref[...][:, 0]                                      # [M]
     iota_mr = jax.lax.broadcasted_iota(jnp.int32, (wcol.shape[0], r), 1)
-    onehot_w = (wcol[:, None] == iota_mr).astype(jnp.float32)  # [M, R]
+    onehot_w = (wcol[:, None] == iota_mr).astype(jnp.int32)            # [M, R]
     vals = jax.lax.dot_general(
-        onehot_w, permuted, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )                                                      # [M, 1]
+        onehot_w, composed, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                                                  # [M, NT]
     out_ref[...] += vals
 
 
-@functools.partial(
-    jax.jit, static_argnames=("r", "interpret")
-)
+def _slice_index_map(j: int, gdim: int, nt: int):
+    """Index map streaming the j-th slice of the (tile, group) step."""
+
+    def index_map(ti, gi, ms, pid):
+        del pid
+        return (0, ms[(ti * gdim + gi) * nt + j])
+
+    return index_map
+
+
+def _reorder_index_map(j: int, gdim: int, nt: int):
+    def index_map(ti, gi, ms, pid):
+        del ms
+        return (0, pid[(ti * gdim + gi) * nt + j])
+
+    return index_map
+
+
+@functools.partial(jax.jit, static_argnames=("r", "nt", "interpret"))
 def lut_stream_gemm(
     wpacked: Array,     # [M, G] int32 packed weight codes
     msrank: Array,      # [G, N] int32 canonical-LUT column ids
     permid: Array,      # [G, N] int32 reordering-LUT column ids
-    canonical: Array,   # [R, C] LUT (stays in HBM; columns streamed)
-    reordering: Array,  # [R, P!] LUT (stays in HBM; columns streamed)
+    canonical: Array,   # [R, C] int32 LUT (stays in HBM; columns streamed)
+    reordering: Array,  # [R, P!] int32 LUT (stays in HBM; columns streamed)
     *,
     r: int,
+    nt: int = 8,
     interpret: bool = True,
 ) -> Array:
-    """Slice-streaming canonical-LUT GEMM; returns float32 [M, N].
+    """Tiled slice-streaming canonical-LUT GEMM; returns int32 [M, N].
 
-    Semantics match :func:`repro.kernels.ref.lut_stream_gemm_ref` (int32
-    partial-product accumulation, returned as f32 — exact for |sum| < 2^24).
+    Semantics match :func:`repro.kernels.ref.lut_stream_gemm_ref` exactly
+    (int32 partial-product accumulation).  ``nt`` is the N-tile width: slices
+    streamed (and output columns produced) per grid step.
     """
     m, gdim = wpacked.shape
     n = msrank.shape[1]
-    # Scalar prefetch wants flat int32 vectors indexed by (n, g).
-    ms_flat = msrank.T.reshape(-1)   # [(n, g)] -> n * G + g
-    pid_flat = permid.T.reshape(-1)
+    nt = max(1, min(nt, n))
+    ntiles = -(-n // nt)
+    npad = ntiles * nt - n
+    if npad:
+        # Pad with column-0 ids: valid addresses, padded outputs sliced away.
+        msrank = jnp.pad(msrank, ((0, 0), (0, npad)))
+        permid = jnp.pad(permid, ((0, 0), (0, npad)))
+    # Scalar prefetch wants flat int32 vectors indexed by (tile, g, j).
+    ms_flat = msrank.reshape(gdim, ntiles, nt).transpose(1, 0, 2).reshape(-1)
+    pid_flat = permid.reshape(gdim, ntiles, nt).transpose(1, 0, 2).reshape(-1)
 
+    in_specs = [
+        # weight column g: [M, 1]
+        pl.BlockSpec((m, 1), lambda ti, gi, ms, pid: (0, gi)),
+    ]
+    in_specs += [
+        pl.BlockSpec((r, 1), _slice_index_map(j, gdim, nt)) for j in range(nt)
+    ]
+    in_specs += [
+        pl.BlockSpec((r, 1), _reorder_index_map(j, gdim, nt)) for j in range(nt)
+    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(n, gdim),
-        in_specs=[
-            # weight column g: [M, 1]
-            pl.BlockSpec((m, 1), lambda ni, gi, ms, pid: (0, gi)),
-            # canonical-LUT slice: column ms[ni*G + gi]
-            pl.BlockSpec((r, 1), lambda ni, gi, ms, pid: (0, ms[ni * gdim + gi])),
-            # reordering-LUT slice: column pid[ni*G + gi]
-            pl.BlockSpec((r, 1), lambda ni, gi, ms, pid: (0, pid[ni * gdim + gi])),
-        ],
-        out_specs=pl.BlockSpec((m, 1), lambda ni, gi, ms, pid: (0, ni)),
+        grid=(ntiles, gdim),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((m, nt), lambda ti, gi, ms, pid: (0, ti)),
     )
+    lut_args = [canonical] * nt + [reordering] * nt
     out = pl.pallas_call(
-        functools.partial(_stream_kernel_body, r=r, ng=gdim),
+        functools.partial(_stream_kernel_body, r=r, nt=nt),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m, ntiles * nt), jnp.int32),
         interpret=interpret,
-    )(ms_flat, pid_flat, wpacked, canonical, reordering)
-    return out
+    )(ms_flat, pid_flat, wpacked, *lut_args)
+    return out[:, :n]

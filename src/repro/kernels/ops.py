@@ -52,13 +52,21 @@ def lut_stream_gemm_full(
     acodes: Array,
     pack: luts.LutPack,
     *,
+    nt: int = 8,
     interpret: bool = True,
 ) -> Array:
-    """Paper-faithful slice-streaming GEMM from raw codes.
+    """Paper-faithful slice-streaming GEMM from raw codes (Pallas kernel v2).
 
     Performs the host-side steps (§IV-A step 1: canonicalize + index), then
-    launches the streaming kernel.  Returns the int-exact GEMM as float32.
+    launches the tiled streaming kernel (``nt`` output columns and streamed
+    slice pairs per grid step, int32 accumulation).  Returns the int-exact
+    GEMM as float32.
     """
+    if pack.canonical.dtype.kind not in "iu":
+        raise ValueError(
+            "lut_stream_gemm_full accumulates in int32; float-grid packs run "
+            "through engine.streamed_lut_gemm instead"
+        )
     p = pack.p
     wcodes, acodes, corr = engine._pad_groups(
         wcodes, acodes, p, pack.wgrid, pack.agrid
@@ -71,9 +79,10 @@ def lut_stream_gemm_full(
         wpacked,
         idx.msrank,
         idx.permid,
-        jnp.asarray(pack.canonical.astype(np.float32)),
+        jnp.asarray(pack.canonical.astype(np.int32)),
         jnp.asarray(pack.reordering.astype(np.int32)),
         r=pack.n_rows,
+        nt=nt,
         interpret=interpret,
     )
-    return out - corr
+    return (out - corr).astype(jnp.float32)

@@ -1,0 +1,72 @@
+"""Minimal, deterministic stand-in for the slice of the hypothesis API this
+suite uses (``given``, ``settings``, ``strategies.integers``,
+``strategies.sampled_from``).
+
+Activated by ``tests/conftest.py`` **only when the real hypothesis package is
+not installed** (see ``pyproject.toml``'s ``dev`` extra for the real thing).
+Examples are drawn from a per-test fixed seed, so runs are reproducible; on
+failure the falsifying example is attached to the raised error.  This is not
+a property-testing engine — no shrinking, no coverage-guided generation —
+just enough to keep the tier-1 suite collecting and exercising the same
+parameter spaces everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+from . import strategies
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def given(**strategy_kwargs):
+    """Decorator: run the test once per drawn example (deterministic seed)."""
+
+    for name, strat in strategy_kwargs.items():
+        if not isinstance(strat, strategies.SearchStrategy):
+            raise TypeError(
+                f"@given argument {name!r} is not a strategy: {strat!r}"
+            )
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            max_examples = getattr(
+                wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            rnd = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(max_examples):
+                kwargs = {
+                    name: strat.do_draw(rnd)
+                    for name, strat in strategy_kwargs.items()
+                }
+                try:
+                    fn(**kwargs)
+                except BaseException as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{max_examples}): "
+                        f"{fn.__name__}({kwargs})"
+                    ) from e
+
+        # pytest must see a zero-arg test, not the wrapped signature.
+        del wrapper.__wrapped__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator mirroring ``hypothesis.settings``; only ``max_examples`` is
+    honored (``deadline`` and anything else is accepted and ignored)."""
+
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate

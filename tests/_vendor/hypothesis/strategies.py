@@ -1,0 +1,69 @@
+"""Strategies for the vendored hypothesis fallback (see ``__init__``)."""
+
+from __future__ import annotations
+
+import random
+from typing import Sequence
+
+
+class SearchStrategy:
+    """A drawable value source; subclasses implement :meth:`do_draw`."""
+
+    def do_draw(self, rnd: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value, self.max_value = min_value, max_value
+
+    def do_draw(self, rnd: random.Random) -> int:
+        return rnd.randint(self.min_value, self.max_value)
+
+    def __repr__(self):
+        return f"integers({self.min_value}, {self.max_value})"
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def do_draw(self, rnd: random.Random):
+        return rnd.choice(self.elements)
+
+    def __repr__(self):
+        return f"sampled_from({self.elements!r})"
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def do_draw(self, rnd: random.Random):
+        return self.value
+
+
+class _Booleans(SearchStrategy):
+    def do_draw(self, rnd: random.Random) -> bool:
+        return rnd.random() < 0.5
+
+
+def integers(min_value: int | None = None, max_value: int | None = None):
+    # Unbounded draws default to a window wide enough for this suite.
+    lo = -(2**16) if min_value is None else min_value
+    hi = 2**16 if max_value is None else max_value
+    return _Integers(lo, hi)
+
+
+def sampled_from(elements: Sequence):
+    return _SampledFrom(elements)
+
+
+def just(value):
+    return _Just(value)
+
+
+def booleans():
+    return _Booleans()

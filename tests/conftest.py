@@ -6,6 +6,16 @@ that need multiple devices spawn subprocesses with their own XLA_FLAGS
 (see tests/test_distribution.py).
 """
 
+import importlib.util
+import pathlib
+import sys
+
+# The property tests import hypothesis; when it isn't installed (the dev
+# extra in pyproject.toml), fall back to the minimal deterministic shim in
+# tests/_vendor so tier-1 collection and the property sweeps still run.
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, str(pathlib.Path(__file__).parent / "_vendor"))
+
 import jax
 import numpy as np
 import pytest

@@ -58,11 +58,117 @@ def test_streamed_engine_bit_exact_and_traffic(cfg, k_slices, seed):
     ref = engine.quantized_matmul_ref(wc, ac, pack.wgrid, pack.agrid)
     out, stats = engine.streamed_lut_gemm(wc, ac, pack, k_slices=k_slices)
     assert np.array_equal(np.asarray(out), np.asarray(ref))
-    # paper Eq.2 first term: every (group, column) slice streamed exactly once
+    # paper Eq.2 first term counts every (group, column) address; the tiled
+    # planner streams each *distinct* slice pair at most once per tile.
     g = -(-k // p)
-    assert stats.slices_streamed == g * n
+    assert stats.flat_slices == g * n
+    assert 1 <= stats.slices_streamed <= g * n
+    assert stats.buffer_hits == g * n - stats.slices_streamed
     assert stats.lookups == m * g * n
-    assert stats.slice_reuse == pytest.approx(m)
+    assert stats.slice_reuse >= m - 1e-9
+    if stats.buffer_hits == 0:
+        assert stats.slice_reuse == pytest.approx(m)
+
+
+@settings(max_examples=8, deadline=None)
+@given(cfg=st.sampled_from([(1, 3, 3), (2, 2, 4)]),
+       m=st.integers(1, 9), k=st.integers(1, 17), n=st.integers(1, 7),
+       seed=st.integers(0, 2**16))
+def test_streamed_matches_seed_loop(cfg, m, k, n, seed):
+    """Tiled+deduplicated engine == seed per-slice loop, incl. partial-K pad."""
+    bw, ba, p = cfg
+    pack = _pack_for(bw, ba, p)
+    rng = np.random.default_rng(seed)
+    wc = jnp.asarray(rng.integers(0, 2**bw, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 2**ba, (k, n)).astype(np.int32))
+    want, stats_seed = engine.streamed_lut_gemm_looped(wc, ac, pack)
+    out, stats = engine.streamed_lut_gemm(wc, ac, pack)
+    assert np.array_equal(np.asarray(out), np.asarray(want))
+    # deduped traffic never exceeds the seed's flat walk
+    assert stats.slices_streamed <= stats_seed.slices_streamed
+    assert stats.streamed_bytes <= stats_seed.streamed_bytes
+    assert stats.lookups == stats_seed.lookups
+
+
+@pytest.mark.parametrize("tile_n", [1, 3, 4, 7, 100, None])
+def test_streamed_tile_size_edge_cases(tile_n):
+    """tile_n of 1, non-divisors, > N, and None are all exact."""
+    bw, ba, p = 1, 3, 3
+    pack = _pack_for(bw, ba, p)
+    rng = np.random.default_rng(7)
+    m, k, n = 6, 10, 7   # ragged K (pad path) and N not divisible by tile_n
+    wc = jnp.asarray(rng.integers(0, 2**bw, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 2**ba, (k, n)).astype(np.int32))
+    ref = engine.quantized_matmul_ref(wc, ac, pack.wgrid, pack.agrid)
+    out, stats = engine.streamed_lut_gemm(wc, ac, pack, tile_n=tile_n)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    g = -(-k // p)
+    assert stats.flat_slices == g * n
+    expect_tiles = 1 if tile_n is None else -(-n // min(tile_n, n))
+    assert stats.tiles == expect_tiles
+
+
+def test_streamed_empty_k():
+    """K=0 (no contraction) yields all zeros, matching the seed loop."""
+    pack = _pack_for(1, 3, 3)
+    wc = jnp.zeros((4, 0), jnp.int32)
+    ac = jnp.zeros((0, 5), jnp.int32)
+    out, stats = engine.streamed_lut_gemm(wc, ac, pack)
+    want, _ = engine.streamed_lut_gemm_looped(wc, ac, pack)
+    assert np.array_equal(np.asarray(out), np.zeros((4, 5), np.int32))
+    assert np.array_equal(np.asarray(out), np.asarray(want))
+    assert stats.slices_streamed == 0 and stats.lookups == 0
+
+
+def test_streamed_k_slices_batching():
+    """k_slices of 1, a non-divisor, and the full N*G address count."""
+    bw, ba, p = 1, 3, 3
+    pack = _pack_for(bw, ba, p)
+    rng = np.random.default_rng(11)
+    m, k, n = 4, 12, 5
+    g = k // p
+    wc = jnp.asarray(rng.integers(0, 2**bw, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 2**ba, (k, n)).astype(np.int32))
+    ref = engine.quantized_matmul_ref(wc, ac, pack.wgrid, pack.agrid)
+    for k_slices in (1, 3, g * n):
+        out, stats = engine.streamed_lut_gemm(wc, ac, pack, k_slices=k_slices)
+        assert np.array_equal(np.asarray(out), np.asarray(ref))
+        assert stats.stream_batches == -(-stats.slices_streamed // k_slices)
+    with pytest.raises(ValueError):
+        engine.streamed_lut_gemm(wc, ac, pack, k_slices=0)
+
+
+def test_streamed_dedup_exploits_repeated_columns():
+    """Duplicate activation columns within a tile are streamed once; slice
+    reuse then exceeds M (the ISSUE's StreamStats invariant)."""
+    bw, ba, p = 1, 3, 3
+    pack = _pack_for(bw, ba, p)
+    rng = np.random.default_rng(0)
+    m, k, n = 8, 9, 6
+    wc = jnp.asarray(rng.integers(0, 2**bw, (m, k)).astype(np.int32))
+    col = rng.integers(0, 2**ba, (k, 1)).astype(np.int32)
+    ac = jnp.asarray(np.repeat(col, n, axis=1))           # all columns equal
+    ref = engine.quantized_matmul_ref(wc, ac, pack.wgrid, pack.agrid)
+    out, stats = engine.streamed_lut_gemm(wc, ac, pack)   # one tile over N
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    g = k // p
+    # at most g distinct slices exist; the flat walk would stream g * n
+    assert stats.slices_streamed <= g
+    assert stats.buffer_hits >= g * (n - 1)
+    assert stats.slice_reuse >= m * n
+
+
+def test_streamed_float_grid_exact():
+    """fp grids run through the streamed engine (float accumulation path)."""
+    pack = luts.build_lut_pack(2, 3, 3, w_kind="fp", a_kind="fp")
+    rng = np.random.default_rng(3)
+    m, k, n = 5, 10, 4   # ragged K: float pad correction path
+    wc = rng.integers(0, 4, (m, k)).astype(np.int32)
+    ac = rng.integers(0, 8, (k, n)).astype(np.int32)
+    ref = pack.wgrid[wc] @ pack.agrid[ac]
+    out, _ = engine.streamed_lut_gemm(jnp.asarray(wc), jnp.asarray(ac), pack)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-5)
 
 
 def test_joint_permutation_invariance():

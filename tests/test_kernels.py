@@ -55,6 +55,21 @@ def test_lut_stream_gemm_sweep(bw, ba, p):
                                rtol=0, atol=0)
 
 
+@pytest.mark.parametrize("nt", [1, 3, 4, 6, 16])
+def test_lut_stream_gemm_tile_widths(nt):
+    """v2 kernel: N-tile width of 1, non-divisors of N, N, and > N."""
+    bw, ba, p = 1, 3, 4
+    pack = luts.build_lut_pack(bw, ba, p)
+    rng = np.random.default_rng(nt)
+    m, k, n = 8, 13, 6
+    wc = jnp.asarray(rng.integers(0, 2**bw, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 2**ba, (k, n)).astype(np.int32))
+    want = engine.canonical_lut_gemm(wc, ac, pack)
+    got = ops.lut_stream_gemm_full(wc, ac, pack, nt=nt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want).astype(np.float32),
+                               rtol=0, atol=0)
+
+
 def test_lut_stream_gemm_ref_oracle_consistency():
     """ref.lut_stream_gemm_ref == engine path on the same prepared indices."""
     import repro.core.packing as packing

@@ -81,6 +81,25 @@ def test_lut_mode_matches_dequant_up_to_activation_quant():
     assert rel < 0.08  # ba=6 activation quantization noise only
 
 
+def test_stream_mode_matches_lut_mode():
+    """stream mode (tiled slice streaming) is bit-identical to lut mode."""
+    rng = np.random.default_rng(0)
+    k, f, b = 24, 12, 5
+    w = jnp.asarray(rng.normal(size=(k, f)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, k)).astype(np.float32))
+    q = api.quantize_linear(w, api.LutLinearSpec(bw=2, ba=4, mode="lut", p=3))
+    y_lut = api.apply_linear(q, x)
+    q_s = api.QuantizedLinear(
+        codes=q.codes, scale=q.scale, bias=None,
+        spec=api.LutLinearSpec(bw=2, ba=4, mode="stream", p=3, tile_n=2), k=q.k,
+    )
+    y_stream = api.apply_linear(q_s, x)
+    np.testing.assert_array_equal(np.asarray(y_stream), np.asarray(y_lut))
+    stats = api.stream_stats_for(q_s, x)
+    assert stats.lookups == f * (k // 3) * b
+    assert stats.slices_streamed <= stats.flat_slices
+
+
 def test_pallas_mode_matches_dequant():
     rng = np.random.default_rng(0)
     k, f, b = 64, 32, 4

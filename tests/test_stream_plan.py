@@ -1,0 +1,84 @@
+"""Stream planner: per-tile dedup correctness, slot inversion, edge cases."""
+
+import numpy as np
+import pytest
+
+from repro.core import stream_plan
+
+
+def _random_ids(g, n, n_ms, n_pid, seed=0):
+    rng = np.random.default_rng(seed)
+    msr = rng.integers(0, n_ms, (g, n))
+    pid = rng.integers(0, n_pid, (g, n))
+    return msr, pid
+
+
+@pytest.mark.parametrize("tile_n", [1, 2, 3, 5, 8, None])
+def test_slot_inverts_to_addresses(tile_n):
+    g, n = 6, 8
+    msr, pid = _random_ids(g, n, n_ms=5, n_pid=4)
+    plan = stream_plan.plan_stream(msr, pid, tile_n=tile_n)
+    assert plan.g == g and plan.n == n
+    covered = []
+    for tile in plan.tiles:
+        covered.extend(range(tile.n0, tile.n1))
+        # slot maps every address back to its slice pair
+        assert np.array_equal(tile.slice_ms[tile.slot], msr[:, tile.n0:tile.n1])
+        assert np.array_equal(tile.slice_pid[tile.slot], pid[:, tile.n0:tile.n1])
+        # unique pairs: no duplicates in the streamed set
+        pairs = set(zip(tile.slice_ms.tolist(), tile.slice_pid.tolist()))
+        assert len(pairs) == tile.n_slices
+    assert covered == list(range(n))
+
+
+@pytest.mark.parametrize("tile_n", [1, 3, 4, None])
+def test_unique_counts_match_brute_force(tile_n):
+    g, n = 5, 7
+    msr, pid = _random_ids(g, n, n_ms=3, n_pid=2, seed=3)
+    plan = stream_plan.plan_stream(msr, pid, tile_n=tile_n)
+    total = 0
+    for tile in plan.tiles:
+        want = len(
+            {(int(msr[gi, ni]), int(pid[gi, ni]))
+             for gi in range(g) for ni in range(tile.n0, tile.n1)}
+        )
+        assert tile.n_slices == want
+        total += want
+    assert plan.unique_slices == total
+    assert plan.flat_slices == g * n
+    assert plan.buffer_hits == g * n - total
+    assert 0 < plan.dedup_ratio <= 1
+
+
+def test_dedup_monotone_in_tile_size():
+    """Wider tiles can only merge more duplicates (unique count decreases)."""
+    g, n = 8, 12
+    msr, pid = _random_ids(g, n, n_ms=4, n_pid=3, seed=5)
+    uniques = [
+        stream_plan.plan_stream(msr, pid, tile_n=t).unique_slices
+        for t in (1, 2, 3, 4, 6, 12)
+    ]
+    assert all(a >= b for a, b in zip(uniques, uniques[1:]))
+
+
+def test_tile_n_validation_and_clamp():
+    msr, pid = _random_ids(3, 4, 5, 5)
+    with pytest.raises(ValueError):
+        stream_plan.plan_stream(msr, pid, tile_n=0)
+    with pytest.raises(ValueError):
+        stream_plan.plan_stream(msr[0], pid[0])          # not 2-D
+    plan = stream_plan.plan_stream(msr, pid, tile_n=99)  # > N clamps to N
+    assert plan.tile_n == 4 and len(plan.tiles) == 1
+
+
+def test_constant_addresses_collapse_to_one_slice():
+    g, n = 4, 6
+    msr = np.full((g, n), 7)
+    pid = np.full((g, n), 2)
+    plan = stream_plan.plan_stream(msr, pid)
+    assert plan.unique_slices == 1
+    assert plan.buffer_hits == g * n - 1
+    # same canonical column under different permutations stays distinct
+    pid2 = pid.copy()
+    pid2[0, 0] = 3
+    assert stream_plan.plan_stream(msr, pid2).unique_slices == 2
