@@ -14,6 +14,12 @@ when XLA accounts trip counts and correct it when it does not.
 MODEL_FLOPS uses 6·N·D for training and 2·N_active·D for inference steps
 (D = tokens processed in the step, divided over chips for the per-chip
 ratio); the MODEL/HLO ratio flags remat and redundant compute.
+
+Reading artifacts needs no devices.  Generating them requires forced host
+devices (the dry-run compiles against a 256/512-chip mesh)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=512 \
+        PYTHONPATH=src python -m repro.launch.dryrun --mesh single
 """
 
 from __future__ import annotations
@@ -113,6 +119,13 @@ def _fmt_s(x: float) -> str:
 
 def rows(results_dir: str = RESULTS_DIR):
     out = []
+    if not glob.glob(os.path.join(results_dir, "single", "*.json")):
+        return [(
+            "roofline/NO_ARTIFACTS", "",
+            "no runs/dryrun artifacts; generate with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "PYTHONPATH=src python -m repro.launch.dryrun --mesh single",
+        )]
     for rec in load_cells(results_dir):
         name = f"roofline/{rec['arch']}/{rec['shape']}"
         if rec.get("status") == "skipped":

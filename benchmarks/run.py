@@ -18,6 +18,11 @@ Sections:
               tiled/deduplicated streamed engine vs the seed per-slice loop;
               also writes BENCH_stream.json at the repo root
   roofline    TPU v5e roofline terms per (arch × shape) from the dry-run
+              artifacts under runs/dryrun/.  Reading the artifacts needs no
+              devices; *generating* them does — run the dry-run under forced
+              host devices first:
+                  XLA_FLAGS=--xla_force_host_platform_device_count=512 \
+                      PYTHONPATH=src python -m repro.launch.dryrun --mesh single
 """
 
 from __future__ import annotations
@@ -26,20 +31,8 @@ import json
 import pathlib
 import sys
 
-from benchmarks import paper_figs
+from benchmarks import paper_figs, roofline
 from benchmarks.common import emit
-
-try:  # roofline needs the dry-run machinery (repro.dist), absent in some trees
-    from benchmarks import roofline
-except Exception as _e:  # pragma: no cover
-    class _RooflineUnavailable:
-        _err = _e
-
-        @classmethod
-        def rows(cls):
-            raise ImportError(f"roofline section unavailable: {cls._err}")
-
-    roofline = _RooflineUnavailable
 
 SECTIONS = {
     "fig3": paper_figs.fig3_candidates,

@@ -1,0 +1,21 @@
+"""Distribution layer: sharding specs, compressed collectives, pipeline stages.
+
+* :mod:`repro.dist.sharding`    — ShardCtx + PartitionSpec derivation for
+  every model family in ``configs/``, including LoCaLUT-quantized pytrees
+  (packed code arrays TP-shard along the output dim; the canonical /
+  reordering LUT tables are tiny and replicated — the same
+  capacity-for-compute tradeoff the paper exploits intra-DRAM).
+* :mod:`repro.dist.collectives` — int8-compressed ``psum`` for gradient
+  reduction over slow links.
+* :mod:`repro.dist.pipeline`    — shard_map GPipe schedule over a ``stage``
+  mesh axis with ``ppermute`` activation rotation.
+"""
+
+from repro.dist.sharding import (  # noqa: F401
+    ShardCtx,
+    cache_specs,
+    param_specs,
+    to_shardings,
+)
+from repro.dist.collectives import compressed_psum  # noqa: F401
+from repro.dist.pipeline import pipeline_apply  # noqa: F401

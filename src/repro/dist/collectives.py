@@ -1,0 +1,41 @@
+"""Compressed cross-device reductions.
+
+``compressed_psum`` trades reduction fidelity for wire bytes: operands are
+quantized to int8 against a *shared* per-tensor scale (the global abs-max
+over the reduction axis, one extra scalar ``pmax``), summed in int32 so the
+accumulation cannot saturate, and rescaled.  On a transport that moves int8
+shards and widens only at reduction points (reduce-scatter of codes +
+all-gather, the deployment target) the wire payload is 4x smaller than an
+fp32 ring all-reduce; note the XLA ``psum`` lowering here carries the int32
+accumulator, so this module models the *numerics* of the compressed
+collective, not its bandwidth.  Worst-case absolute error is
+``n_devices * scale / 2`` with ``scale = amax / 127`` — well under 2%
+relative for gradient-shaped tensors (see ``tests/test_dist_units.py`` for
+measured bounds across dtypes and scales).
+
+Works under any collective-bearing transform that binds the axis name:
+``shard_map``, ``pmap``, or single-process ``vmap(..., axis_name=...)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def compressed_psum(v: Array, axis: str) -> Array:
+    """int8-compressed ``psum`` of ``v`` over the mesh/vmap axis ``axis``."""
+    orig_dtype = v.dtype
+    vf = v.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(vf)), axis)
+    scale = jnp.where(amax > 0, amax / 127.0, jnp.float32(1.0))
+    q = jnp.clip(jnp.round(vf / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    out = total.astype(jnp.float32) * scale
+    # inf/NaN anywhere (gradient blow-up) would otherwise quantize to
+    # garbage and come out near-zero on every device; poison the result so
+    # divergence stays as visible as with an exact psum.
+    out = jnp.where(jnp.isfinite(amax), out, jnp.float32(jnp.nan))
+    return out.astype(orig_dtype)

@@ -1,0 +1,295 @@
+"""Sharding specs for the model zoo, including LoCaLUT-quantized pytrees.
+
+:class:`ShardCtx` names the mesh axes one forward/train step runs over:
+``dp_axes`` (data / FSDP axes, possibly hierarchical — ``("pod", "data")``
+on the multi-pod mesh) and ``tp_axis`` (tensor / expert parallelism).
+:func:`param_specs` walks any parameter pytree from ``configs/`` (dense,
+MoE expert-parallel, RWKV/SSM, enc-dec) and assigns a PartitionSpec per
+leaf:
+
+* dense "column" projections (``wq``/``wk``/``wv``/``w_up``/… — output dim
+  grows with heads/ffn) TP-shard the output dim; "row" projections
+  (``wo``/``w_down``/…) TP-shard the input dim so GSPMD reduces partial
+  sums once per block;
+* MoE expert stacks (``[units, E, d, f]``) shard the expert dim on the TP
+  axis — expert parallelism, matching the ``shard_map`` EP path in
+  :mod:`repro.models.moe`;
+* **LoCaLUT-quantized leaves** (:class:`repro.core.QuantizedLinear`):
+  packed low-bit code arrays TP-shard along the *output* (N) dim — codes
+  are bit-packed along K, so splitting K would cut inside bytes — and the
+  per-channel scales/bias follow.  The canonical and reordering LUT tables
+  are *not* in the pytree at all (they are static, tiny, and rebuilt from
+  ``(bw, ba, p)`` on every host — see ``repro.core.api._lut_pack_cache``);
+  every shard reuses the same tables, which is the paper's
+  capacity-for-compute tradeoff restated at cluster scale: replicate the
+  small shared LUTs, shard the big code arrays.
+* with ``fsdp=True`` dense matrices additionally shard their non-TP matrix
+  dim over the dp axes (classic FSDP weight layout under GSPMD).
+
+Every rule falls back to replication when the dim is not divisible by the
+mesh-axis size, so the specs are always valid to ``device_put`` against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import QuantizedLinear
+from repro.models.config import ModelConfig
+from repro.models.model import MOE_EXPERT_NAMES, in_moe_subtree
+
+Array = jax.Array
+
+# Output-dim-parallel projections: the output grows with heads / ffn width.
+_COL_PARALLEL = frozenset(
+    {"wq", "wk", "wv", "wg", "wr", "w_up", "w_gate", "w_kup", "w_vup",
+     "in_proj", "lm_head"}
+)
+# Input-dim-parallel projections: consume a TP-sharded activation.
+_ROW_PARALLEL = frozenset({"wo", "w_down", "out_proj"})
+
+# Minimum length for a cache dim-2 to be treated as the sequence dim when
+# ``seq_shard`` is on (SSM/RWKV states also have a dim 2, but it is a small
+# feature dim).
+_SEQ_SHARD_MIN = 1024
+
+
+def _axis_size(mesh, axis: str) -> int:
+    try:
+        return int(dict(mesh.shape).get(axis, 1))
+    except (AttributeError, TypeError):
+        return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh axes + policy knobs threaded through model/train/serve code.
+
+    ``mesh`` may be a concrete :class:`jax.sharding.Mesh`, an
+    ``AbstractMesh`` (spec derivation without devices), or ``None``
+    (single-device: every helper degenerates to a no-op).
+    """
+
+    mesh: Any = None
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    fsdp: bool = False
+    seq_shard: bool = False
+
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return math.prod(_axis_size(self.mesh, a) for a in self.dp_axes)
+
+    def tp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return _axis_size(self.mesh, self.tp_axis)
+
+    def dp(self):
+        """The dp axes as a single PartitionSpec entry."""
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def constrain(self, x: Array, spec: P) -> Array:
+        """``with_sharding_constraint`` when a concrete mesh is attached."""
+        if not isinstance(self.mesh, Mesh):
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def constrain_acts(self, x: Array) -> Array:
+        """Constrain ``[B, S, D]`` activations: batch on dp; seq on the TP
+        axis when ``seq_shard`` (long-context prefill/decode)."""
+        if not isinstance(self.mesh, Mesh) or x.ndim < 2:
+            return x
+        dims = [None] * x.ndim
+        if self.dp_size() > 1 and x.shape[0] % self.dp_size() == 0:
+            dims[0] = self.dp()
+        if (
+            self.seq_shard
+            and x.ndim >= 3
+            and self.tp_size() > 1
+            and x.shape[1] > 1
+            and x.shape[1] % self.tp_size() == 0
+        ):
+            dims[1] = self.tp_axis
+        if all(d is None for d in dims):
+            return x
+        return self.constrain(x, P(*dims))
+
+
+# ---------------------------------------------------------------------------
+# param_specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig, params: Any, ctx: ShardCtx) -> Any:
+    """PartitionSpec pytree mirroring ``params`` (arrays or ShapeDtypeStructs).
+
+    The returned tree has exactly the structure of ``params`` —
+    :class:`QuantizedLinear` nodes are preserved (with spec leaves) so
+    ``device_put``/``jit`` sharding trees line up leaf-for-leaf.
+    """
+    tp_size = ctx.tp_size()
+    dp_size = ctx.dp_size()
+    tp = ctx.tp_axis if tp_size > 1 else None
+    dp = ctx.dp() if dp_size > 1 else None
+    fsdp = ctx.fsdp and dp is not None
+
+    def dense_w(a, name: str) -> P:
+        # a: [*stack, K, F]
+        dims = [None] * a.ndim
+        if a.ndim >= 2:
+            if tp and name in _COL_PARALLEL and a.shape[-1] % tp_size == 0:
+                dims[-1] = tp
+            elif tp and name in _ROW_PARALLEL and a.shape[-2] % tp_size == 0:
+                dims[-2] = tp
+            if fsdp:
+                for d in (-2, -1):
+                    if dims[d] is None and a.shape[d] % dp_size == 0:
+                        dims[d] = dp
+                        break
+        return P(*dims)
+
+    def dense_b(a, parent: str) -> P:
+        dims = [None] * a.ndim
+        if tp and parent in _COL_PARALLEL and a.shape[-1] % tp_size == 0:
+            dims[-1] = tp
+        return P(*dims)
+
+    def quantized(q: QuantizedLinear, name: str, under_moe: bool):
+        codes, scale = q.codes, q.scale
+        cdims = [None] * codes.ndim
+        sdims = [None] * scale.ndim
+        if under_moe and name in MOE_EXPERT_NAMES and codes.ndim >= 3:
+            # Expert parallelism: shard the expert dim of [*, E, F, Kp].
+            # A non-divisible expert count replicates outright (no fallthrough
+            # to output-dim sharding): moe_apply runs replicated experts in
+            # that case, so any sharding would be all-gathered every layer.
+            if tp and codes.shape[-3] % tp_size == 0:
+                cdims[-3] = tp
+                if scale.ndim >= 2 and scale.shape[-2] % tp_size == 0:
+                    sdims[-2] = tp
+        elif tp and codes.shape[-2] % tp_size == 0:
+            # TP-shard packed codes along the output (N) dim; K stays whole
+            # (it is bit-packed) and the LUT tables are replicated (static,
+            # outside the pytree).
+            cdims[-2] = tp
+            if scale.shape[-1] % tp_size == 0:
+                sdims[-1] = tp
+        bias_spec = None
+        if q.bias is not None:
+            bdims = [None] * q.bias.ndim
+            if sdims and sdims[-1] is not None and q.bias.shape[-1] % tp_size == 0:
+                bdims[-1] = tp
+            bias_spec = P(*bdims)
+        return dataclasses.replace(
+            q, codes=P(*cdims), scale=P(*sdims), bias=bias_spec
+        )
+
+    def embed_spec(a) -> P:
+        # [V, D]: vocab-parallel on tp; fsdp shards the model dim on dp.
+        dims = [None] * a.ndim
+        if tp and a.shape[0] % tp_size == 0:
+            dims[0] = tp
+        if fsdp and a.ndim >= 2 and a.shape[-1] % dp_size == 0:
+            dims[-1] = dp
+        return P(*dims)
+
+    def moe_expert(a) -> P:
+        # Raw stacked experts [*, E, d, f]: expert-parallel on the TP axis.
+        dims = [None] * a.ndim
+        if tp and a.ndim >= 3 and a.shape[-3] % tp_size == 0:
+            dims[-3] = tp
+        return P(*dims)
+
+    def generic(a) -> P:
+        dims = [None] * a.ndim
+        if fsdp and a.ndim >= 2:
+            for d in range(a.ndim - 1, -1, -1):
+                if a.shape[d] >= dp_size and a.shape[d] % dp_size == 0:
+                    dims[d] = dp
+                    break
+        return P(*dims)
+
+    def walk(node, name: str = "", under_moe: bool = False):
+        if isinstance(node, QuantizedLinear):
+            return quantized(node, name, under_moe)
+        if isinstance(node, dict):
+            if "w" in node and hasattr(node["w"], "ndim"):
+                out = {"w": dense_w(node["w"], name)}
+                for k, v in node.items():
+                    if k != "w":
+                        out[k] = dense_b(v, name) if hasattr(v, "ndim") else v
+                return out
+            return {
+                k: walk(v, k, under_moe=in_moe_subtree(k, under_moe))
+                for k, v in node.items()
+            }
+        if isinstance(node, (list, tuple)):
+            walked = [walk(v, name, under_moe) for v in node]
+            return tuple(walked) if isinstance(node, tuple) else walked
+        if hasattr(node, "ndim"):
+            if name == "embed":
+                return embed_spec(node)
+            if under_moe and name in MOE_EXPERT_NAMES and node.ndim >= 3:
+                return moe_expert(node)
+            return generic(node)
+        return node
+
+    return walk(params)
+
+
+# ---------------------------------------------------------------------------
+# cache_specs
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, caches: Any, ctx: ShardCtx) -> Any:
+    """Specs for the stacked KV/SSM cache pytrees of ``init_cache``.
+
+    Leaves are ``[units, batch, ...]``: the batch dim shards on dp; with
+    ``seq_shard=True`` a long dim 2 (the sequence) shards on the TP axis —
+    the long-context layout where each chip keeps a context slice.
+    """
+    dp_size = ctx.dp_size()
+    tp_size = ctx.tp_size()
+    dp = ctx.dp() if dp_size > 1 else None
+    tp = ctx.tp_axis if tp_size > 1 else None
+
+    def leaf(a) -> P:
+        if not hasattr(a, "ndim") or a.ndim < 2:
+            return P()
+        dims = [None] * a.ndim
+        if dp and a.shape[1] % dp_size == 0 and a.shape[1] >= dp_size:
+            dims[1] = dp
+        if (
+            ctx.seq_shard
+            and tp
+            and a.ndim >= 3
+            and a.shape[2] >= _SEQ_SHARD_MIN
+            and a.shape[2] % tp_size == 0
+        ):
+            dims[2] = tp
+        return P(*dims)
+
+    return jax.tree.map(leaf, caches)
+
+
+# ---------------------------------------------------------------------------
+# to_shardings
+# ---------------------------------------------------------------------------
+
+
+def to_shardings(specs: Any, mesh) -> Any:
+    """Map every PartitionSpec leaf of ``specs`` to a NamedSharding."""
+
+    def conv(s):
+        return NamedSharding(mesh, s) if isinstance(s, P) else s
+
+    return jax.tree.map(conv, specs, is_leaf=lambda x: isinstance(x, P))

@@ -1,10 +1,6 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST precede every other import (jax locks the device
-count at first init).  For each cell this driver:
+For each cell this driver:
 
 1. builds the full-scale config, abstract parameters (``jax.eval_shape`` —
    no allocation), sharding specs, and ShapeDtypeStruct inputs;
@@ -29,7 +25,24 @@ prefill/decode cells lower ``prefill_step``/``serve_step`` with
 **LoCaLUT-quantized** parameters (packed low-bit codes — the paper's
 technique exercised at scale).  ``--dense`` lowers the unquantized serve
 variants for the §Perf before/after comparison.
+
+CLI runs force 512 host devices (the guard below MUST precede every jax
+import — jax locks the device count at first init).  It is gated on
+``__main__`` so merely importing this module (``benchmarks.roofline``,
+tests) never mutates the process's XLA device count.
 """
+
+import os
+
+if __name__ == "__main__":
+    # Appended to any existing XLA_FLAGS so unrelated flags (e.g.
+    # --xla_dump_to) keep working; an explicit
+    # --xla_force_host_platform_device_count wins.
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=512"
+        ).strip()
 
 import argparse
 import dataclasses

@@ -31,8 +31,34 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_smoke_mesh(n: int = 8):
-    """Small mesh over forced host devices for distribution tests."""
+    """Small (data=n/2, model=2) mesh over forced host devices."""
     import numpy as np
 
-    devices = jax.devices()[:n]
-    return jax.sharding.Mesh(np.array(devices).reshape(len(devices) // 2, 2), ("data", "model"))
+    if n < 2 or n % 2:
+        raise ValueError(
+            f"make_smoke_mesh needs an even n >= 2 to form a (n//2, 2) "
+            f"(data, model) mesh; got n={n}"
+        )
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the smoke mesh; have {len(devices)} "
+            f"(run under XLA_FLAGS=--xla_force_host_platform_device_count={n})"
+        )
+    return jax.sharding.Mesh(np.array(devices[:n]).reshape(n // 2, 2), ("data", "model"))
+
+
+def make_stage_mesh(n_stages: int):
+    """1-D ``("stage",)`` mesh for ``repro.dist.pipeline.pipeline_apply``."""
+    import numpy as np
+
+    if n_stages < 1:
+        raise ValueError(f"make_stage_mesh needs n_stages >= 1, got {n_stages}")
+    devices = jax.devices()
+    if len(devices) < n_stages:
+        raise RuntimeError(
+            f"need {n_stages} devices for a {n_stages}-stage pipeline mesh; "
+            f"have {len(devices)} "
+            f"(run under XLA_FLAGS=--xla_force_host_platform_device_count={n_stages})"
+        )
+    return jax.sharding.Mesh(np.array(devices[:n_stages]), ("stage",))

@@ -31,7 +31,15 @@ _QUANT_LINEAR_NAMES = frozenset(
         "in_proj", "out_proj",                         # mamba2
     }
 )
-_MOE_EXPERT_NAMES = frozenset({"w_gate", "w_up", "w_down"})
+# Stacked expert-weight leaves inside a "moe" subtree; shared with
+# repro.dist.sharding so the quantize walk and the spec walk cannot drift.
+MOE_EXPERT_NAMES = frozenset({"w_gate", "w_up", "w_down"})
+
+
+def in_moe_subtree(key: str, under_moe: bool) -> bool:
+    """Propagate the 'inside a MoE block' flag through a parameter walk
+    (shared experts are ordinary FFNs, not expert stacks)."""
+    return key == "moe" or (under_moe and key != "shared")
 
 
 def _quantize_dense(p: dict, spec: LutLinearSpec) -> QuantizedLinear:
@@ -75,13 +83,13 @@ def quantize_model(params, cfg: ModelConfig, spec: LutLinearSpec):
                     out[k] = _quantize_dense(v, spec)
                 elif (
                     under_moe
-                    and k in _MOE_EXPERT_NAMES
+                    and k in MOE_EXPERT_NAMES
                     and hasattr(v, "ndim")
                     and v.ndim >= 3
                 ):
                     out[k] = _quantize_raw(v, spec)
                 else:
-                    out[k] = walk(v, under_moe=(k == "moe") or under_moe and k != "shared")
+                    out[k] = walk(v, under_moe=in_moe_subtree(k, under_moe))
             return out
         if isinstance(node, list):
             return [walk(v, under_moe) for v in node]

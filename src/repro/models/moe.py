@@ -16,7 +16,7 @@ never leave their data shard.
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,9 @@ try:  # jax>=0.4.35 exposes shard_map at top level
     from jax import shard_map as _shard_map
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
+
+if TYPE_CHECKING:  # import only for annotations: models must not require dist
+    from repro.dist.sharding import ShardCtx
 
 Array = jax.Array
 
@@ -128,7 +131,7 @@ def moe_apply(
     p: dict,
     x: Array,
     cfg: ModelConfig,
-    ctx=None,  # repro.dist.sharding.ShardCtx | None
+    ctx: Optional["ShardCtx"] = None,
 ) -> tuple[Array, Array]:
     """Returns (y, aux_loss).  ``ctx`` enables expert parallelism."""
     e = cfg.moe
@@ -143,7 +146,13 @@ def moe_apply(
     w_up = maybe_dequant(p["w_up"], x.dtype)
     w_down = maybe_dequant(p["w_down"], x.dtype)
 
-    if ctx is None or ctx.mesh is None or ctx.tp_size() == 1:
+    tp_size = 1 if ctx is None or ctx.mesh is None else ctx.tp_size()
+    if tp_size > 1 and e.n_experts % tp_size != 0:
+        # Uneven expert split: integer division would give shards 0 experts
+        # (or drop the remainder).  Fall back to replicated experts — still
+        # correct, just without expert parallelism for this layer.
+        tp_size = 1
+    if tp_size == 1:
         y = _dispatch_compute(
             xt, gates, eidx, w_gate, w_up, w_down,
             e_first=0, e_total=e.n_experts,
@@ -151,7 +160,7 @@ def moe_apply(
         )
     else:
         tp = ctx.tp_axis
-        el = e.n_experts // ctx.tp_size()
+        el = e.n_experts // tp_size
         dp = ctx.dp_axes
 
         def shard_fn(xt_l, gates_l, eidx_l, wg_l, wu_l, wd_l):

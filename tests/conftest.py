@@ -20,9 +20,10 @@ import jax
 import numpy as np
 import pytest
 
-# Lock the backend to the real single CPU device BEFORE any test can import
-# repro.launch.dryrun (whose first lines set a 512-device XLA_FLAGS for its
-# own subprocess use — jax ignores it once initialized).
+# Lock the backend to the real single CPU device up front so smoke tests and
+# benchmarks are immune to any XLA_FLAGS a test might export later (jax
+# ignores env changes once initialized).  Importing repro.launch.dryrun is
+# side-effect free these days — only running it as __main__ forces devices.
 jax.devices()
 
 

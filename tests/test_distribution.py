@@ -104,12 +104,11 @@ def test_compressed_allreduce_close_to_exact():
 def test_pipeline_parallel_stage_wrapper():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import Mesh
     from repro.dist.pipeline import pipeline_apply
+    from repro.launch.mesh import make_stage_mesh
 
     n_stages, n_micro, d = 4, 6, 8
-    devs = np.array(jax.devices()[:4]).reshape(4)
-    mesh = Mesh(devs, ("stage",))
+    mesh = make_stage_mesh(n_stages)
     Ws = jax.random.normal(jax.random.PRNGKey(0), (n_stages, d, d)) * 0.3
     xs = jax.random.normal(jax.random.PRNGKey(1), (n_micro, 2, d))
     stage_fn = lambda w, x: jnp.tanh(x @ w)
