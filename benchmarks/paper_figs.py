@@ -22,6 +22,9 @@ from repro.core.pim_cost import GemmShape
 # it as BENCH_stream.json so the streamed-engine perf trajectory is tracked.
 LAST_STREAM_PAYLOAD: dict | None = None
 
+# Populated by :func:`serve_decode_benchmark`; persisted as BENCH_serve.json.
+LAST_SERVE_PAYLOAD: dict | None = None
+
 
 def _us(seconds: float) -> float:
     return seconds * 1e6
@@ -237,6 +240,19 @@ def fig13_k_sensitivity():
             )
         best = min(t_by_k, key=t_by_k.get)
         rows.append((f"fig13/W{bw}A{ba}/best_k", "", f"k={best}"))
+    # Measured dedup of the tiled stream planner at the fig13 default config
+    # — plan-only path (plan_stream + counter arithmetic), no GEMM executed.
+    cfg = _STREAM_BENCH_CFG
+    pack = luts.build_lut_pack(cfg["bw"], cfg["ba"], cfg["p"])
+    rng = np.random.default_rng(0)
+    ac = rng.integers(0, 1 << cfg["ba"], (s.k, s.n)).astype(np.int32)
+    st = engine.stream_plan_stats(s.m, ac, pack, tile_n=cfg["tile_n"])
+    rows.append(
+        (f"fig13/planner_dedup/({s.m},{s.k},{s.n})", "",
+         f"tile_n={cfg['tile_n']};slices={st.slices_streamed}/{st.flat_slices};"
+         f"dedup={st.dedup_ratio:.3f};buffer_hit_share="
+         f"{st.buffer_hits / max(st.flat_slices, 1) * 100:.1f}%")
+    )
     return rows
 
 
@@ -258,15 +274,13 @@ def fig16_breakdown():
                  f"{shares['reordering_lut_access']/total*100:.1f}%;paper=6.9%"))
     rows.append(("fig16/index_calc_dominates", "",
                  f"{shares['index_calc']/total*100:.1f}%;paper=dominant"))
-    # Measured traffic of the tiled, deduplicated streaming engine — the
+    # Measured traffic of the tiled, deduplicated streaming dataflow — the
     # dedup/buffer-hit shares complement the instruction-count breakdown.
-    import jax.numpy as jnp_
-
+    # Plan-only path: planner + counter arithmetic, no GEMM executed.
     rng = np.random.default_rng(0)
     pack = luts.build_lut_pack(1, 3, 4)
-    wc = jnp_.asarray(rng.integers(0, 2, (64, 96)).astype(np.int32))
-    ac = jnp_.asarray(rng.integers(0, 8, (96, 16)).astype(np.int32))
-    _, st = engine.streamed_lut_gemm(wc, ac, pack, tile_n=16)
+    ac = rng.integers(0, 8, (96, 16)).astype(np.int32)
+    st = engine.stream_plan_stats(64, ac, pack, tile_n=16)
     rows.append(("fig16/stream_dedup", "",
                  f"slices={st.slices_streamed}/{st.flat_slices};"
                  f"buffer_hit_share={st.buffer_hits/max(st.flat_slices,1)*100:.1f}%"))
@@ -396,6 +410,116 @@ def functional_gemm_timing():
             shape=list(_STREAM_BENCH_SHAPES[-1]),
             speedup=shapes_payload[-1]["speedup"],
         ),
+    )
+    return rows
+
+
+# --- serve: weight-stationary decode vs the seed serving loop --------------
+
+# Quantization at the fig13 default config (W1A3, p=4); 2-layer GQA decoder.
+_SERVE_QUANT = dict(bw=1, ba=3, p=4)
+_SERVE_MODEL = dict(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=512
+)
+# One request per batch, every batch a *distinct* prompt length — the ragged
+# traffic that makes the seed loop retrace prefill per length while the
+# bucketed scan driver compiles once per power-of-two bucket (8/16/32 here).
+_SERVE_PROMPT_LENS = [3, 4, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 17, 18, 19, 21,
+                      22, 23, 25, 26, 27, 29]
+_SERVE_MAX_NEW = 32
+
+
+def serve_decode_benchmark():
+    """Weight-stationary serving (§V-B): prepared scan decode vs seed loop.
+
+    ``unprepared``: raw :class:`QuantizedLinear` params + the seed per-token
+    Python decode loop (one device→host sync per token, prefill re-traced per
+    ragged prompt length).  ``prepared``: ``Model.prepare`` params + the
+    bucketed ``lax.scan`` decode (one sync per request batch).  Both passes
+    are timed cold (serving a fresh ragged request set, compiles included —
+    the realistic serving cost) and warm (same set again, steady state).
+    Numbers land in :data:`LAST_SERVE_PAYLOAD` → ``BENCH_serve.json``.
+    """
+    global LAST_SERVE_PAYLOAD
+    import dataclasses as _dc
+    import time
+
+    from repro.configs import get_config
+    from repro.core import LutLinearSpec
+    from repro.models.model import build_model
+    from repro.serve.serving import Request, ServeEngine
+
+    cfg = _dc.replace(
+        get_config("stablelm-12b", smoke=True), name="serve-bench", **_SERVE_MODEL
+    )
+    model = build_model(cfg)
+    import jax
+
+    params = model.init(jax.random.PRNGKey(0))
+    spec = LutLinearSpec(mode="dequant", **_SERVE_QUANT)
+    qparams = model.quantize(params, spec)
+    t0 = time.perf_counter()
+    pparams = model.prepare(qparams)
+    prepare_s = time.perf_counter() - t0
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, pl).astype(np.int32),
+                max_new_tokens=_SERVE_MAX_NEW)
+        for pl in _SERVE_PROMPT_LENS
+    ]
+    total_tokens = len(reqs) * _SERVE_MAX_NEW
+    n_batches = len(reqs)                       # batch=1 -> one request each
+
+    def run(engine):
+        t0 = time.perf_counter()
+        outs = engine.generate(reqs)
+        cold = time.perf_counter() - t0
+        syncs = engine.host_syncs
+        t0 = time.perf_counter()
+        outs2 = engine.generate(reqs)
+        warm = time.perf_counter() - t0
+        assert outs == outs2, "greedy decode must be deterministic"
+        return outs, cold, warm, syncs
+
+    eng_loop = ServeEngine(model, qparams, batch=1, max_seq=64, decode="loop")
+    outs_loop, cold_l, warm_l, syncs_l = run(eng_loop)
+    eng_scan = ServeEngine(model, pparams, batch=1, max_seq=64, decode="scan")
+    outs_scan, cold_s, warm_s, syncs_s = run(eng_scan)
+
+    tps = lambda dt: total_tokens / dt
+    cold_speedup = tps(cold_s) / tps(cold_l)
+    warm_speedup = tps(warm_s) / tps(warm_l)
+    rows = [
+        ("serve/unprepared_loop/cold", _us(cold_l / total_tokens),
+         f"tokens_per_s={tps(cold_l):.1f};syncs_per_batch={syncs_l / n_batches:.1f}"),
+        ("serve/prepared_scan/cold", _us(cold_s / total_tokens),
+         f"tokens_per_s={tps(cold_s):.1f};syncs_per_batch={syncs_s / n_batches:.1f}"),
+        ("serve/unprepared_loop/warm", _us(warm_l / total_tokens),
+         f"tokens_per_s={tps(warm_l):.1f}"),
+        ("serve/prepared_scan/warm", _us(warm_s / total_tokens),
+         f"tokens_per_s={tps(warm_s):.1f}"),
+        ("serve/speedup", "",
+         f"cold={cold_speedup:.2f}x;warm={warm_speedup:.2f}x;prepare_s={prepare_s:.2f}"),
+    ]
+    LAST_SERVE_PAYLOAD = dict(
+        section="serve",
+        config=dict(
+            model=dict(_SERVE_MODEL), quant=dict(_SERVE_QUANT), mode="dequant",
+            batch=1, max_new=_SERVE_MAX_NEW, prompt_lens=list(_SERVE_PROMPT_LENS),
+            total_tokens=total_tokens,
+        ),
+        unprepared=dict(
+            cold_tokens_per_s=tps(cold_l), warm_tokens_per_s=tps(warm_l),
+            host_syncs_per_batch=syncs_l / n_batches,
+        ),
+        prepared=dict(
+            cold_tokens_per_s=tps(cold_s), warm_tokens_per_s=tps(warm_s),
+            host_syncs_per_batch=syncs_s / n_batches,
+            prepare_seconds=prepare_s,
+        ),
+        speedup=dict(cold=cold_speedup, warm=warm_speedup),
+        headline=dict(speedup=cold_speedup),
     )
     return rows
 

@@ -17,6 +17,9 @@ Sections:
   functional  measured wall time of the exact LUT engines (CPU), incl. the
               tiled/deduplicated streamed engine vs the seed per-slice loop;
               also writes BENCH_stream.json at the repo root
+  serve       weight-stationary serving: prepared params + scan decode vs the
+              seed per-token loop (tokens/s, host-sync counts) at the fig13
+              default quant config; writes BENCH_serve.json at the repo root
   roofline    TPU v5e roofline terms per (arch × shape) from the dry-run
               artifacts under runs/dryrun/.  Reading the artifacts needs no
               devices; *generating* them does — run the dry-run under forced
@@ -48,11 +51,14 @@ SECTIONS = {
     "fig20": paper_figs.fig20_bank_level_pim,
     "fig21": paper_figs.fig21_float_support,
     "functional": paper_figs.functional_gemm_timing,
+    "serve": paper_figs.serve_decode_benchmark,
     "roofline": roofline.rows,
 }
 
 
-STREAM_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_stream.json"
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+STREAM_JSON = _ROOT / "BENCH_stream.json"
+SERVE_JSON = _ROOT / "BENCH_serve.json"
 
 
 def main() -> None:
@@ -72,6 +78,11 @@ def main() -> None:
             json.dumps(paper_figs.LAST_STREAM_PAYLOAD, indent=2) + "\n"
         )
         print(f"# wrote {STREAM_JSON}", file=sys.stderr)
+    if paper_figs.LAST_SERVE_PAYLOAD is not None:
+        SERVE_JSON.write_text(
+            json.dumps(paper_figs.LAST_SERVE_PAYLOAD, indent=2) + "\n"
+        )
+        print(f"# wrote {SERVE_JSON}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ Layers (bottom-up):
 * :mod:`repro.core.perfmodel` — paper Eq. 2–6 p*/streaming auto-selection
 * :mod:`repro.core.pim_cost`  — UPMEM cycle cost model (paper figures)
 * :mod:`repro.core.api`       — QuantizedLinear / apply_linear for the models
+* :mod:`repro.core.prepared`  — weight-stationary prepare/apply split
 """
 
 from repro.core.api import (  # noqa: F401
@@ -18,7 +19,9 @@ from repro.core.api import (  # noqa: F401
     QuantizedLinear,
     apply_linear,
     dequantize_weights,
+    prepare_linear,
     quantize_linear,
 )
 from repro.core.luts import LutPack, build_lut_pack  # noqa: F401
 from repro.core.perfmodel import Plan, PlanInputs, make_plan  # noqa: F401
+from repro.core.prepared import PreparedLinear  # noqa: F401

@@ -21,6 +21,11 @@ codes** plus per-output-channel scales; three execution paths share it:
 Weight layout: codes are stored transposed ``[F, K]`` and bit-packed along
 ``K`` (the contraction dim) so the decode in every path streams contiguous
 bytes.
+
+Serving is weight-stationary (§V-B): :func:`prepare_linear` freezes every
+per-call weight product once (:mod:`repro.core.prepared`), and
+:func:`apply_linear` transparently takes either the raw or the prepared
+layer — same bits, none of the per-call weight work.
 """
 
 from __future__ import annotations
@@ -50,6 +55,8 @@ class LutLinearSpec:
     w_kind: str = "int"
     a_kind: str = "int"
     tile_n: Optional[int] = None   # stream mode: activation columns per tile
+    buffer_bytes: Optional[int] = None  # stream mode: auto tile_n from a
+                                        # buffer budget when tile_n is None
 
     def wspec(self) -> QuantSpec:
         return QuantSpec(self.bw, self.w_kind, axis=1)  # per-output-channel
@@ -109,11 +116,18 @@ def dequantize_weights(q: QuantizedLinear) -> Array:
     return w_t.T
 
 
-def apply_linear(q: QuantizedLinear, x: Array, *, interpret: bool = True) -> Array:
+def apply_linear(q, x: Array, *, interpret: bool = True) -> Array:
     """``y = x @ W (+ bias)`` through the path selected by ``q.spec.mode``.
 
-    ``x``: [..., K] activations; returns [..., F].
+    ``x``: [..., K] activations; returns [..., F].  Accepts either a raw
+    :class:`QuantizedLinear` or a :class:`repro.core.prepared.PreparedLinear`
+    — the latter routes through the weight-stationary fast path (bit-identical
+    results, no per-call weight work).
     """
+    from repro.core import prepared as _prepared
+
+    if isinstance(q, _prepared.PreparedLinear):
+        return _prepared.apply_prepared(q, x, interpret=interpret)
     mode = q.spec.mode
     if mode == "dequant":
         y = _dequant_matmul(q, x)
@@ -148,41 +162,96 @@ def _dequant_matmul(q: QuantizedLinear, x: Array) -> Array:
     return jnp.einsum("...k,fk->...f", x, w_t)
 
 
+def plan_p(f: int, k: int, n: int, spec: LutLinearSpec) -> int:
+    """The packing degree every LUT path agrees on: ``spec.p``, else the
+    Eq. 2/4 sweep's ``p*`` for this (M, K, N).  Shared by the raw, plan-only
+    and prepared paths so they cannot drift."""
+    return spec.p or perfmodel.make_plan(
+        perfmodel.PlanInputs(m=f, k=k, n=n, bw=spec.bw, ba=spec.ba)
+    ).p_star
+
+
+def quantized_lut_gemm(q, x: Array, run) -> Array:
+    """The activation side every LUT path shares — one body, so the raw and
+    prepared implementations cannot drift numerically: quantize activations,
+    ``o = run(acodes, n)`` (the engine GEMM, [F, B]), rescale, reshape."""
+    xf = x.reshape(-1, x.shape[-1])                                 # [B, K]
+    acodes, ascale = quantize(xf.T, q.spec.aspec())                 # [K, B]
+    o = run(acodes, xf.shape[0])
+    y = o.astype(jnp.float32) * q.scale[:, None] * ascale
+    return y.T.reshape(x.shape[:-1] + (q.f,)).astype(x.dtype)
+
+
 def _lut_matmul(q: QuantizedLinear, x: Array) -> Array:
     """Paper-faithful path: canonical + reordering LUT engine (bit-exact)."""
     spec = q.spec
-    xf = x.reshape(-1, x.shape[-1])                                 # [B, K]
-    acodes, ascale = quantize(xf.T, spec.aspec())                   # [K, B]
-    wcodes = packing.unpack_bits(q.codes, spec.bw)[:, : q.k]        # [F, K]
-    p = spec.p or perfmodel.make_plan(
-        perfmodel.PlanInputs(m=q.f, k=q.k, n=xf.shape[0], bw=spec.bw, ba=spec.ba)
-    ).p_star
-    pack = _lut_pack_cache(spec.bw, spec.ba, p, spec.w_kind, spec.a_kind)
-    o = engine.canonical_lut_gemm(wcodes, acodes, pack)             # [F, B] int32
-    y = o.astype(jnp.float32) * q.scale[:, None] * ascale
-    return y.T.reshape(x.shape[:-1] + (q.f,)).astype(x.dtype)
+
+    def run(acodes, n):
+        wcodes = packing.unpack_bits(q.codes, spec.bw)[:, : q.k]    # [F, K]
+        p = plan_p(q.f, q.k, n, spec)
+        pack = _lut_pack_cache(spec.bw, spec.ba, p, spec.w_kind, spec.a_kind)
+        return engine.canonical_lut_gemm(wcodes, acodes, pack)      # [F,B] i32
+
+    return quantized_lut_gemm(q, x, run)
 
 
 def _stream_matmul(q: QuantizedLinear, x: Array) -> tuple[Array, engine.StreamStats]:
     """§IV-C path: tiled, deduplicated slice streaming (bit-exact vs ``lut``)."""
     spec = q.spec
-    xf = x.reshape(-1, x.shape[-1])                                 # [B, K]
-    acodes, ascale = quantize(xf.T, spec.aspec())                   # [K, B]
-    wcodes = packing.unpack_bits(q.codes, spec.bw)[:, : q.k]        # [F, K]
-    p = spec.p or perfmodel.make_plan(
-        perfmodel.PlanInputs(m=q.f, k=q.k, n=xf.shape[0], bw=spec.bw, ba=spec.ba)
-    ).p_star
-    pack = _lut_pack_cache(spec.bw, spec.ba, p, spec.w_kind, spec.a_kind)
-    o, stats = engine.streamed_lut_gemm(wcodes, acodes, pack, tile_n=spec.tile_n)
-    y = o.astype(jnp.float32) * q.scale[:, None] * ascale
-    return y.T.reshape(x.shape[:-1] + (q.f,)).astype(x.dtype), stats
+    stats_box = []
+
+    def run(acodes, n):
+        wcodes = packing.unpack_bits(q.codes, spec.bw)[:, : q.k]    # [F, K]
+        p = plan_p(q.f, q.k, n, spec)
+        pack = _lut_pack_cache(spec.bw, spec.ba, p, spec.w_kind, spec.a_kind)
+        o, stats = engine.streamed_lut_gemm(
+            wcodes, acodes, pack,
+            tile_n=spec.tile_n, buffer_bytes=spec.buffer_bytes,
+        )
+        stats_box.append(stats)
+        return o
+
+    return quantized_lut_gemm(q, x, run), stats_box[0]
 
 
-def stream_stats_for(q: QuantizedLinear, x: Array) -> engine.StreamStats:
+def stream_stats_for(q, x: Array, *, plan_only: bool = False) -> engine.StreamStats:
     """Simulated DRAM→buffer traffic of serving ``x`` through ``q`` with the
-    slice-streaming dataflow (regardless of ``q.spec.mode``)."""
+    slice-streaming dataflow (regardless of ``q.spec.mode``).
+
+    ``plan_only=True`` skips the GEMM entirely: quantize the activations,
+    run the stream planner, and derive every stat by counter arithmetic
+    (:func:`repro.core.engine.stream_plan_stats`) — same numbers, no compute.
+    Accepts a raw :class:`QuantizedLinear` or a prepared layer.
+    """
+    from repro.core import prepared as _prepared
+
+    if plan_only:
+        spec = q.spec
+        xf = x.reshape(-1, x.shape[-1])
+        acodes, _ = quantize(xf.T, spec.aspec())
+        if isinstance(q, _prepared.PreparedLinear):
+            p = q.p
+        else:
+            p = plan_p(q.f, q.k, xf.shape[0], spec)
+        pack = _lut_pack_cache(spec.bw, spec.ba, p, spec.w_kind, spec.a_kind)
+        return engine.stream_plan_stats(
+            q.f, np.asarray(acodes), pack,
+            tile_n=spec.tile_n, buffer_bytes=spec.buffer_bytes,
+        )
+    if isinstance(q, _prepared.PreparedLinear):
+        _, stats = _prepared.stream_matmul(q, x)
+        return stats
     _, stats = _stream_matmul(q, x)
     return stats
+
+
+def prepare_linear(q: QuantizedLinear, **kw):
+    """Freeze ``q``'s weight-side serve products into a weight-stationary
+    :class:`repro.core.prepared.PreparedLinear` (see that module's docstring
+    for the cached-product → paper-step map)."""
+    from repro.core import prepared as _prepared
+
+    return _prepared.prepare_linear(q, **kw)
 
 
 @functools.lru_cache(maxsize=64)

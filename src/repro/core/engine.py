@@ -15,6 +15,14 @@ path produces the identical int32 result as the quantized matmul oracle):
                                  the benchmark baseline and equivalence
                                  oracle for the tiled engine.
 
+All three engines also take *precomputed weight products* (the prepare/apply
+split of :mod:`repro.core.prepared`): ``packed_lut_gemm(widx=...)``,
+``canonical_lut_gemm(wpacked=... / wcanon_table=...)`` and
+``streamed_lut_gemm(prep=...)`` skip every per-call weight-side step —
+serving is weight-stationary, so that work belongs at prepare time (§V-B).
+:func:`stream_plan_stats` reports the streaming traffic from the plan alone,
+without executing the GEMM.
+
 GEMM convention matches the paper: ``O[M,N] = W[M,K] · A[K,N]`` with
 ``W`` codes from a ``bw``-bit grid and ``A`` codes from a ``ba``-bit grid.
 ``K`` is grouped into ``G = ceil(K/p)`` packs; a partial final group is padded
@@ -38,23 +46,30 @@ from repro.core.quantize import zero_code
 Array = jax.Array
 
 
-def _pad_groups(wcodes: Array, acodes: Array, p: int, wgrid, agrid):
-    """Pad K to a multiple of p with fixed codes; return padded arrays plus
-    the exact scalar correction ``n_pad * wgrid[cw] * agrid[ca]``.
+def pad_info(k: int, p: int, wgrid, agrid):
+    """The single source of truth for partial-group padding: pad length, the
+    fixed (weight, activation) pad codes, and the exact scalar correction
+    ``pad * wgrid[cw] * agrid[ca]``.
 
     The correction is computed in the grids' own dtype: integer grids yield a
     Python int (bit-exact paths), float grids (fp4/fp8 packs) a Python float —
     truncating through ``int()`` would corrupt float-grid pad values.
     """
-    k = wcodes.shape[1]
     pad = (-k) % p
-    if pad == 0:
-        return wcodes, acodes, 0
     wg, ag = np.asarray(wgrid), np.asarray(agrid)
     cw, ca = zero_code(wg), zero_code(ag)
+    corr = (pad * wg[cw] * ag[ca]).item() if pad else 0
+    return pad, cw, ca, corr
+
+
+def _pad_groups(wcodes: Array, acodes: Array, p: int, wgrid, agrid):
+    """Pad K to a multiple of p with fixed codes on both operands; returns the
+    padded arrays plus the exact scalar correction (see :func:`pad_info`)."""
+    pad, cw, ca, corr = pad_info(wcodes.shape[1], p, wgrid, agrid)
+    if pad == 0:
+        return wcodes, acodes, 0
     wcodes = jnp.pad(wcodes, ((0, 0), (0, pad)), constant_values=cw)
     acodes = jnp.pad(acodes, ((0, pad), (0, 0)), constant_values=ca)
-    corr = (pad * wg[cw] * ag[ca]).item()
     return wcodes, acodes, corr
 
 
@@ -65,16 +80,41 @@ def quantized_matmul_ref(wcodes, acodes, wgrid, agrid) -> Array:
     return wv @ av
 
 
-def packed_lut_gemm(wcodes: Array, acodes: Array, pack: LutPack) -> Array:
-    """Operation-packed LUT GEMM (baseline OP): one lookup per p MACs."""
+def _pad_acodes(acodes, p: int, wgrid, agrid):
+    """Weight-stationary twin of :func:`_pad_groups`: the weight products are
+    already padded/packed at prepare time, so only the activation side is
+    padded here.  The correction scalar depends only on the pad *length* and
+    the fixed pad codes (:func:`pad_info`), never on the actual weights."""
+    pad, _, ca, corr = pad_info(acodes.shape[0], p, wgrid, agrid)
+    if pad == 0:
+        return acodes, 0
+    return jnp.pad(acodes, ((0, pad), (0, 0)), constant_values=ca), corr
+
+
+def packed_lut_gemm(
+    wcodes: Optional[Array],
+    acodes: Array,
+    pack: LutPack,
+    *,
+    widx: Optional[Array] = None,
+) -> Array:
+    """Operation-packed LUT GEMM (baseline OP): one lookup per p MACs.
+
+    ``widx`` ([M, G], from padded weight codes) skips the per-call weight
+    padding + packing — the prepare/apply split's weight-stationary path.
+    """
     if pack.packed is None:
         raise ValueError("LutPack built without the operation-packed LUT")
     p = pack.p
-    wcodes, acodes, corr = _pad_groups(wcodes, acodes, p, pack.wgrid, pack.agrid)
-    m, k = wcodes.shape
+    if widx is None:
+        wcodes, acodes, corr = _pad_groups(wcodes, acodes, p, pack.wgrid, pack.agrid)
+        m, k = wcodes.shape
+        g = k // p
+        widx = packing.pack_index(wcodes.reshape(m, g, p), pack.bw)      # [M,G]
+    else:
+        acodes, corr = _pad_acodes(acodes, p, pack.wgrid, pack.agrid)
     n = acodes.shape[1]
-    g = k // p
-    widx = packing.pack_index(wcodes.reshape(m, g, p), pack.bw)          # [M,G]
+    g = acodes.shape[0] // p
     aidx = packing.pack_index(
         acodes.reshape(g, p, n).transpose(0, 2, 1), pack.ba
     )                                                                     # [G,N]
@@ -131,23 +171,44 @@ def canonicalize_activations_np(acodes: np.ndarray, pack: LutPack) -> CanonIndic
 
 
 def canonical_lut_gemm(
-    wcodes: Array,
+    wcodes: Optional[Array],
     acodes: Array,
     pack: LutPack,
     idx: Optional[CanonIndices] = None,
+    *,
+    wpacked: Optional[Array] = None,
+    wcanon_table: Optional[Array] = None,
 ) -> Array:
-    """Canonical LUT + reordering LUT GEMM (OP+LC+RC)."""
+    """Canonical LUT + reordering LUT GEMM (OP+LC+RC).
+
+    Weight-stationary fast paths (prepare/apply split): ``wpacked`` ([M, G],
+    packed group indices of the padded weight codes) skips the per-call pad +
+    ``pack_index``; ``wcanon_table`` ([M, G, p!], the reordering LUT gathered
+    at every permutation id, i.e. ``reorder[wpacked]``) additionally folds the
+    reordering-LUT lookup into a weight-static table, leaving only canonical
+    gathers at serve time.  All three entry points are bit-identical.
+    """
     p = pack.p
-    wcodes, acodes, corr = _pad_groups(wcodes, acodes, p, pack.wgrid, pack.agrid)
+    if wpacked is None and wcanon_table is None:
+        wcodes, acodes, corr = _pad_groups(wcodes, acodes, p, pack.wgrid, pack.agrid)
+        m, k = wcodes.shape
+        g = k // p
+        wpacked = packing.pack_index(wcodes.reshape(m, g, p), pack.bw)    # [M,G]
+    else:
+        acodes, corr = _pad_acodes(acodes, p, pack.wgrid, pack.agrid)
     if idx is None:
         idx = canonicalize_activations(acodes, pack)
-    m, k = wcodes.shape
-    g = k // p
-    wpacked = packing.pack_index(wcodes.reshape(m, g, p), pack.bw)        # [M,G]
-    reorder = jnp.asarray(pack.reordering.astype(np.int32))
     canon = jnp.asarray(pack.canonical)
-    # step 3 (paper Fig. 5): reordering-LUT lookup -> canonical weight code
-    wcanon = reorder[wpacked[:, :, None], idx.permid[None, :, :]]         # [M,G,N]
+    if wcanon_table is not None:
+        # step 3 pre-resolved at prepare time: gather the canonical weight
+        # code straight out of the weight-static table at this perm id.
+        wcanon = jnp.take_along_axis(
+            jnp.asarray(wcanon_table), idx.permid[None, :, :], axis=2
+        )                                                                 # [M,G,N]
+    else:
+        reorder = jnp.asarray(pack.reordering.astype(np.int32))
+        # step 3 (paper Fig. 5): reordering-LUT lookup -> canonical weight code
+        wcanon = reorder[wpacked[:, :, None], idx.permid[None, :, :]]     # [M,G,N]
     # step 4-5: canonical-LUT lookup + accumulate.  Integer packs accumulate
     # in int32 (bit-exact); float packs stay in their own dtype.
     acc = jnp.int32 if pack.canonical.dtype.kind in "iu" else canon.dtype
@@ -186,13 +247,89 @@ class StreamStats:
         return self.slices_streamed / max(self.flat_slices, 1)
 
 
+@dataclasses.dataclass
+class StreamWeights:
+    """Weight-stationary products of the streamed engine (host arrays).
+
+    Built once per weight matrix (:func:`prepare_stream_weights`) and reused
+    across every serve-time call — the §IV-B capacity-for-compute tradeoff
+    applied one level up: the pad/pack/one-hot work the seed engine redid per
+    GEMM is paid once and stored.
+    """
+
+    wpk: np.ndarray               # [M, G] int32 packed group indices (padded K)
+    onehot: Optional[np.ndarray]  # [M, G*R] f32 one-hot (None -> gather path)
+    m: int
+    g: int
+    r: int
+    pad: int                      # K padding columns applied
+    corr: float                   # exact scalar pad correction
+
+
+def prepare_stream_weights(wcodes, pack: LutPack) -> StreamWeights:
+    """Pad + pack the weight codes and build the exact one-hot contraction
+    matrix (when the f32 partial sums stay below 2^24 and the matrix is not
+    absurdly large) — everything the streamed engine needs from the weights."""
+    p = pack.p
+    wc = np.asarray(wcodes)
+    wg, ag = np.asarray(pack.wgrid), np.asarray(pack.agrid)
+    pad, cw, _, corr = pad_info(wc.shape[1], p, wg, ag)
+    if pad:
+        wc = np.pad(wc, ((0, 0), (0, pad)), constant_values=cw)
+    m = wc.shape[0]
+    g = wc.shape[1] // p
+    wpk = packing.pack_index_np(wc.reshape(m, g, p), pack.bw).astype(np.int32)
+    r = pack.n_rows
+    int_pack = pack.canonical.dtype.kind in "iu"
+    # The one-hot BLAS contraction is exact iff every partial sum stays below
+    # 2^24 (f32 integer exactness); huge R x G one-hots also stop paying off.
+    bound = g * p * float(np.max(np.abs(wg))) * float(np.max(np.abs(ag)))
+    onehot = None
+    if int_pack and g > 0 and bound < 2.0**24 and m * g * r <= 32_000_000:
+        buf = np.zeros(m * g * r, dtype=np.float32)
+        buf[np.arange(m * g, dtype=np.int64) * r + wpk.ravel()] = 1.0
+        onehot = buf.reshape(m, g * r)                             # [M, G*R]
+    return StreamWeights(
+        wpk=wpk, onehot=onehot, m=m, g=g, r=r, pad=pad, corr=corr
+    )
+
+
+def _slice_bytes(pack: LutPack) -> int:
+    """DRAM bytes of one streamed (canonical, reordering) column pair."""
+    return pack.n_rows * (
+        pack.canonical.dtype.itemsize + pack.reordering.dtype.itemsize
+    )
+
+
+def _tile_stats(stats: StreamStats, tile, m: int, pack: LutPack, k_slices: int):
+    """Accrue one tile's traffic counters — the single accounting shared by
+    the executed engine and the plan-only path, so they cannot drift."""
+    s = tile.n_slices
+    r = pack.n_rows
+    stats.slices_streamed += s
+    stats.buffer_hits += tile.buffer_hits
+    stats.stream_batches += -(-s // k_slices)
+    stats.canonical_bytes += s * r * pack.canonical.dtype.itemsize
+    stats.reordering_bytes += s * r * pack.reordering.dtype.itemsize
+    stats.lookups += m * tile.flat_slices
+
+
+def _finish_stats(stats: StreamStats, plan) -> StreamStats:
+    stats.flat_slices = plan.flat_slices
+    stats.tiles = len(plan.tiles)
+    stats.slice_reuse = stats.lookups / max(stats.slices_streamed, 1)
+    return stats
+
+
 def streamed_lut_gemm(
-    wcodes: Array,
+    wcodes: Optional[Array],
     acodes: Array,
     pack: LutPack,
     *,
     k_slices: int = 2,
     tile_n: Optional[int] = None,
+    buffer_bytes: Optional[int] = None,
+    prep: Optional[StreamWeights] = None,
 ) -> tuple[Array, StreamStats]:
     """Tiled, deduplicated LUT slice streaming (§IV-C): LUT-stationary dataflow.
 
@@ -208,48 +345,45 @@ def streamed_lut_gemm(
     additionally reports the traffic the real device would see, which
     :mod:`repro.core.pim_cost` converts to time.  ``k_slices`` sets the DMA
     batch size used for ``stream_batches`` accounting (paper Fig. 13's k).
+
+    Weight-stationary path: pass ``prep`` (:func:`prepare_stream_weights`) to
+    skip every per-call weight product (``wcodes`` may then be ``None``).
+    ``buffer_bytes`` with ``tile_n=None`` auto-selects the widest tile whose
+    unique-slice set fits the budget (:func:`repro.core.stream_plan.auto_tile_n`).
     """
     if k_slices < 1:
         raise ValueError(f"k_slices must be >= 1, got {k_slices}")
     p = pack.p
-    wc = np.asarray(wcodes)
+    if prep is None:
+        prep = prepare_stream_weights(wcodes, pack)
     ac = np.asarray(acodes)
-    wg, ag = np.asarray(pack.wgrid), np.asarray(pack.agrid)
-    k = wc.shape[1]
-    pad = (-k) % p
-    corr = 0
-    if pad:
-        cw, ca = zero_code(wg), zero_code(ag)
-        wc = np.pad(wc, ((0, 0), (0, pad)), constant_values=cw)
-        ac = np.pad(ac, ((0, pad), (0, 0)), constant_values=ca)
-        corr = (pad * wg[cw] * ag[ca]).item()
+    if prep.g * p - prep.pad != ac.shape[0]:
+        raise ValueError(
+            f"prepared weights cover K={prep.g * p - prep.pad}, "
+            f"activations have K={ac.shape[0]}"
+        )
+    if prep.pad:
+        ca = zero_code(np.asarray(pack.agrid))
+        ac = np.pad(ac, ((0, prep.pad), (0, 0)), constant_values=ca)
+    corr = prep.corr
     idx = canonicalize_activations_np(ac, pack)
-    m = wc.shape[0]
+    m, g, r = prep.m, prep.g, prep.r
     n = ac.shape[1]
-    g = wc.shape[1] // p
-    wpk = packing.pack_index_np(wc.reshape(m, g, p), pack.bw).astype(np.int32)
+    wpk = prep.wpk
+    onehot = prep.onehot
+    use_matmul = onehot is not None
     reorder = pack.reordering
     canon = pack.canonical
     int_pack = canon.dtype.kind in "iu"
     acc_dtype = np.int64 if int_pack else np.float64
 
-    plan = stream_plan.plan_stream(idx.msrank, idx.permid, tile_n=tile_n)
-    r = pack.n_rows
-    # The one-hot BLAS contraction is exact iff every partial sum stays below
-    # 2^24 (f32 integer exactness); huge R x G one-hots also stop paying off.
-    bound = g * p * float(np.max(np.abs(wg))) * float(np.max(np.abs(ag)))
-    use_matmul = (
-        int_pack and g > 0 and bound < 2.0**24 and m * g * r <= 32_000_000
+    plan = stream_plan.plan_stream(
+        idx.msrank, idx.permid, tile_n=tile_n,
+        buffer_bytes=buffer_bytes, slice_bytes=_slice_bytes(pack),
     )
-    if use_matmul:
-        onehot = np.zeros(m * g * r, dtype=np.float32)
-        onehot[np.arange(m * g, dtype=np.int64) * r + wpk.ravel()] = 1.0
-        onehot = onehot.reshape(m, g * r)                          # [M, G*R]
 
     out = np.empty((m, n), dtype=acc_dtype)
     stats = StreamStats()
-    rbytes = reorder.dtype.itemsize
-    cbytes = canon.dtype.itemsize
 
     for tile in plan.tiles:
         # --- stream: load each distinct canonical + reordering column once -
@@ -269,18 +403,41 @@ def streamed_lut_gemm(
         else:
             vals = composed[wpk[:, :, None], tile.slot[None, :, :]]  # [M,G,NT]
             out[:, tile.n0 : tile.n1] = vals.sum(axis=1, dtype=acc_dtype)
-        s = tile.n_slices
-        stats.slices_streamed += s
-        stats.buffer_hits += tile.buffer_hits
-        stats.stream_batches += -(-s // k_slices)
-        stats.canonical_bytes += s * r * cbytes
-        stats.reordering_bytes += s * r * rbytes
-        stats.lookups += m * tile.flat_slices
-    stats.flat_slices = plan.flat_slices
-    stats.tiles = len(plan.tiles)
-    stats.slice_reuse = stats.lookups / max(stats.slices_streamed, 1)
+        _tile_stats(stats, tile, m, pack, k_slices)
+    _finish_stats(stats, plan)
     out_dtype = np.int32 if int_pack else np.float32
     return jnp.asarray((out - corr).astype(out_dtype)), stats
+
+
+def stream_plan_stats(
+    m: int,
+    acodes,
+    pack: LutPack,
+    *,
+    k_slices: int = 2,
+    tile_n: Optional[int] = None,
+    buffer_bytes: Optional[int] = None,
+) -> StreamStats:
+    """Traffic stats of the streamed dataflow WITHOUT executing the GEMM.
+
+    Pure plan + counter arithmetic: canonicalize the activations, run the
+    :func:`repro.core.stream_plan.plan_stream` planner, and derive every
+    :class:`StreamStats` field from the tile schedule and ``m`` (the weight
+    row count).  Field-for-field identical to the stats
+    :func:`streamed_lut_gemm` returns for the same inputs — the figure
+    harnesses use this to report dedup/traffic without paying for compute.
+    """
+    if k_slices < 1:
+        raise ValueError(f"k_slices must be >= 1, got {k_slices}")
+    idx = canonicalize_activations_np(np.asarray(acodes), pack)
+    plan = stream_plan.plan_stream(
+        idx.msrank, idx.permid, tile_n=tile_n,
+        buffer_bytes=buffer_bytes, slice_bytes=_slice_bytes(pack),
+    )
+    stats = StreamStats()
+    for tile in plan.tiles:
+        _tile_stats(stats, tile, m, pack, k_slices)
+    return _finish_stats(stats, plan)
 
 
 def streamed_lut_gemm_looped(

@@ -35,6 +35,12 @@ def main():
     ap.add_argument("--bw", type=int, default=4)
     ap.add_argument("--ba", type=int, default=4)
     ap.add_argument("--dense", action="store_true", help="skip quantization")
+    ap.add_argument("--no-prepare", dest="prepare", action="store_false",
+                    help="serve raw QuantizedLinear params (skip the "
+                         "weight-stationary prepare step)")
+    ap.add_argument("--decode", default="scan", choices=["scan", "loop"],
+                    help="fused lax.scan decode (1 host sync/batch) or the "
+                         "seed per-token loop")
     ap.add_argument("--profile", default="baseline", choices=["baseline", "serve"],
                     help="apply the EXPERIMENTS.md §4-validated perf profile")
     args = ap.parse_args()
@@ -53,8 +59,14 @@ def main():
         print(f"quantized W{args.bw}A{args.ba} in {time.time()-t0:.1f}s")
         nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
         print(f"packed parameter bytes: {nbytes:,}")
+        if args.prepare:
+            t0 = time.time()
+            params = model.prepare(params)
+            print(f"prepared weight-stationary serve products in "
+                  f"{time.time()-t0:.1f}s")
 
-    eng = ServeEngine(model, params, batch=args.batch, max_seq=args.max_seq)
+    eng = ServeEngine(model, params, batch=args.batch, max_seq=args.max_seq,
+                      decode=args.decode)
     rng = np.random.default_rng(0)
     reqs = [
         Request(

@@ -1,8 +1,10 @@
 """Shared primitive layers: norms, RoPE, activations, linears.
 
-A "linear" parameter is either a dense dict ``{"w": [K,F], ("b": [F])}`` or a
-:class:`repro.core.QuantizedLinear` — :func:`linear` dispatches, which is what
-makes LoCaLUT quantization a drop-in transform over any model in the zoo.
+A "linear" parameter is either a dense dict ``{"w": [K,F], ("b": [F])}``, a
+:class:`repro.core.QuantizedLinear`, or a weight-stationary
+:class:`repro.core.PreparedLinear` — :func:`linear` dispatches, which is what
+makes LoCaLUT quantization (and the serve-time prepare/apply split) a drop-in
+transform over any model in the zoo.
 """
 
 from __future__ import annotations
@@ -13,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import QuantizedLinear, apply_linear
+from repro.core import PreparedLinear, QuantizedLinear, apply_linear
 
 Array = jax.Array
 
@@ -27,7 +29,7 @@ def dense_init(key, k: int, f: int, *, bias: bool = False, scale: float | None =
 
 
 def linear(p, x: Array) -> Array:
-    if isinstance(p, QuantizedLinear):
+    if isinstance(p, (QuantizedLinear, PreparedLinear)):
         return apply_linear(p, x)
     y = x @ p["w"].astype(x.dtype)
     if "b" in p:

@@ -16,8 +16,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import LutLinearSpec, QuantizedLinear, quantize_linear
+from repro.core import LutLinearSpec, QuantizedLinear, prepare_linear, quantize_linear
 from repro.models import transformer
 from repro.models.config import ModelConfig
 
@@ -98,9 +99,55 @@ def quantize_model(params, cfg: ModelConfig, spec: LutLinearSpec):
     return walk(params)
 
 
+def prepare_params(params, **kw):
+    """Freeze every :class:`QuantizedLinear` leaf into its weight-stationary
+    :class:`repro.core.PreparedLinear` form.
+
+    The paper's §V-B serve workflow as a tree transform: quantize → prepare
+    once, then the decode loop touches no per-call weight work.  Model
+    parameter trees stack layers for ``lax.scan`` (and MoE experts along E),
+    so stacked leaves (>=3-D codes) are prepared under ``vmap`` — the scan
+    slices the cached products per unit exactly like it slices raw codes.
+    Host-side products (the streamed engine's one-hot) only materialize on
+    unstacked leaves; ``kw`` forwards to :func:`repro.core.prepare_linear`
+    (``n_hint`` etc.).
+    """
+
+    def f(x):
+        if not isinstance(x, QuantizedLinear):
+            return x
+        n_lead = x.codes.ndim - 2
+        if n_lead == 0:
+            return prepare_linear(x, **kw)
+        # The per-layer wcanon capacity cap must cover the whole stack, not
+        # each vmap slice individually.
+        from repro.core.prepared import WCANON_MAX_ENTRIES
+
+        stack = int(np.prod(x.codes.shape[:n_lead]))
+        kw_s = dict(kw)
+        kw_s.setdefault(
+            "wcanon_max_entries", max(WCANON_MAX_ENTRIES // max(stack, 1), 1)
+        )
+        kw_s["host_products"] = False    # tracers cannot leave the device
+        fn = lambda q: prepare_linear(q, **kw_s)
+        for _ in range(n_lead):
+            fn = jax.vmap(fn)
+        return fn(x)
+
+    return jax.tree.map(f, params, is_leaf=lambda x: isinstance(x, QuantizedLinear))
+
+
 def maybe_dequant(p, dtype=jnp.bfloat16):
-    """Raw-array-or-QuantizedLinear -> dense array (used by MoE einsums)."""
-    if isinstance(p, QuantizedLinear):
+    """Raw-array-or-(Prepared)QuantizedLinear -> dense array (MoE einsums)."""
+    from repro.core import PreparedLinear
+
+    if isinstance(p, PreparedLinear) and p.wcodes is not None:
+        # Prepared dequant-mode leaf: decode from the cached unpacked codes
+        # instead of re-unpacking the bit-packed bytes per call.
+        grid = jnp.asarray(p.spec.wspec().grid(), dtype=jnp.float32)
+        w_t = grid[p.wcodes.astype(jnp.int32)] * p.scale[..., None]  # [...,F,K]
+        return jnp.swapaxes(w_t, -1, -2).astype(dtype)               # [...,K,F]
+    if isinstance(p, (QuantizedLinear, PreparedLinear)):
         from repro.core.api import dequantize_weights
 
         fn = dequantize_weights
@@ -145,6 +192,10 @@ class Model:
 
     def quantize(self, params, spec: LutLinearSpec):
         return quantize_model(params, self.cfg, spec)
+
+    def prepare(self, params, **kw):
+        """Weight-stationary serve form: cache all per-call weight products."""
+        return prepare_params(params, **kw)
 
 
 def build_model(cfg: ModelConfig) -> Model:

@@ -5,12 +5,34 @@ the GEMMs; prefill processes the prompt, decode emits one token per step
 against the KV cache.  ``ServeEngine`` is the small-scale continuous-batching
 driver used by the examples; the jitted step functions are the objects the
 multi-pod dry-run lowers at scale.
+
+Serving is **weight-stationary** end to end: prepare the params once
+(``Model.prepare``), then the decode loop runs as a single on-device
+``lax.scan`` with donated KV caches (``decode="scan"``, the default) —
+
+* prompt lengths are bucketed to powers of two, so prefill compiles once per
+  bucket instead of once per ragged length;
+* the whole token matrix materializes in ONE device→host transfer per request
+  batch (the seed loop synced per token, per slot);
+* per-request ``max_new_tokens`` is honored inside the scan by masking
+  finished slots.
+
+``decode="loop"`` keeps the seed per-token Python loop as the benchmark
+baseline and equivalence oracle.  Given the *same* left-padded prompt, the
+scan is token-for-token identical to the loop; bucketing pads further than
+the loop does, which — like the seed's own left-padding of ragged prompts
+inside a chunk (there is no pad attention mask) — perturbs the attended
+prefix and hence the generations for prompt lengths off the bucket
+boundary.  ``prompt_bucket=1`` disables bucketing (exact lengths, loop-
+identical outputs for every length, one prefill trace per length).  Both
+drivers count their device→host transfers in ``ServeEngine.host_syncs`` so
+tests and ``benchmarks/run.py serve`` can assert the O(1)-sync property.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -42,51 +64,173 @@ def make_serve_step(model: Model, *, ctx=None, greedy: bool = True):
     return serve_step
 
 
+def make_decode_scan(model: Model, *, ctx=None):
+    """Whole-decode-phase program: every step fused into one ``lax.scan``.
+
+    ``(params, prefill_logits [B,1,V], caches, pos0, max_new [B], length)``
+    -> ``(tokens [B, length], caches)``.  The first token (greedy argmax of
+    the prefill logits) is computed on device too, so the host touches
+    nothing until the full token matrix is ready — one transfer per batch.
+    Caches are donated: each step's KV writes reuse the prior buffers
+    instead of allocating ``length`` cache copies.  Slots that exhausted
+    their per-request budget keep stepping (static shapes) but their emitted
+    tokens are masked to -1.
+    """
+
+    @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
+    def decode_scan(params, logits, caches, pos0, max_new, length: int):
+        tok0 = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)  # [B,1]
+
+        def body(carry, _):
+            token, caches, pos = carry
+            lg, caches = model.decode_step(params, token, caches, pos, ctx=ctx)
+            nxt = jnp.argmax(lg[:, -1:, :], axis=-1).astype(jnp.int32)
+            return (nxt, caches, pos + 1), nxt[:, 0]
+
+        (_, caches, _), ys = jax.lax.scan(
+            body, (tok0, caches, jnp.asarray(pos0, jnp.int32)), None,
+            length=length - 1,
+        )
+        toks = jnp.concatenate([tok0, ys.T], axis=1)                 # [B, L]
+        step_ix = jnp.arange(length, dtype=jnp.int32)[None, :]
+        return jnp.where(step_ix < max_new[:, None], toks, -1), caches
+
+    return decode_scan
+
+
+def bucket_to(n: int, floor: int) -> int:
+    """Smallest ``floor * 2^i`` that is >= ``n`` (shape-bucketing helper).
+
+    ``floor <= 1`` disables bucketing and returns ``n`` unchanged.
+    """
+    if floor <= 1:
+        return n
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray                  # [S] int32
     max_new_tokens: int = 16
-    generated: Optional[list] = None
 
 
 class ServeEngine:
-    """Minimal batched serving loop (static batch slots, greedy decode)."""
+    """Minimal batched serving driver (static batch slots, greedy decode)."""
 
-    def __init__(self, model: Model, params, *, batch: int, max_seq: int, ctx=None):
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        batch: int,
+        max_seq: int,
+        ctx=None,
+        decode: str = "scan",
+        prompt_bucket: int = 8,
+    ):
+        if decode not in ("scan", "loop"):
+            raise ValueError(f"decode must be 'scan' or 'loop', got {decode!r}")
         self.model = model
         self.params = params
         self.batch = batch
         self.max_seq = max_seq
         self.ctx = ctx
+        self.decode = decode
+        self.prompt_bucket = prompt_bucket
         self._prefill = jax.jit(make_prefill_step(model, ctx=ctx))
         self._step = jax.jit(make_serve_step(model, ctx=ctx))
+        self._decode_scan = make_decode_scan(model, ctx=ctx)
+        self.host_syncs = 0             # device->host transfers performed
+
+    def _fetch(self, x) -> np.ndarray:
+        """The ONLY device→host crossing point — counted so the O(1)-syncs
+        property of the scan decode is assertable from outside."""
+        self.host_syncs += 1
+        return np.asarray(x)
 
     def generate(self, requests: list[Request]) -> list[list[int]]:
         """Serve a list of equal-or-ragged prompts in fixed-size batches."""
         out: list[list[int]] = []
         for start in range(0, len(requests), self.batch):
             chunk = requests[start : start + self.batch]
-            out.extend(self._generate_batch(chunk))
+            out.extend(
+                self._generate_batch_scan(chunk)
+                if self.decode == "scan"
+                else self._generate_batch_loop(chunk)
+            )
         return out
 
-    def _generate_batch(self, chunk: list[Request]) -> list[list[int]]:
+    # --- scan driver: bucketed prefill + one fused decode program ---------
+
+    def _pad_prompts(self, chunk: list[Request], plen: int) -> np.ndarray:
+        toks = np.zeros((self.batch, plen), np.int32)
+        for i, r in enumerate(chunk):
+            toks[i, plen - len(r.prompt) :] = r.prompt          # left-pad
+        return toks
+
+    def _check_fits(self, plen: int, max_new: int) -> None:
+        if plen + max_new > self.max_seq:
+            raise ValueError(
+                f"prompt ({plen}) + max_new ({max_new}) exceeds max_seq "
+                f"{self.max_seq}"
+            )
+
+    def _generate_batch_scan(self, chunk: list[Request]) -> list[list[int]]:
         b = self.batch
         plen = max(len(r.prompt) for r in chunk)
-        toks = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(chunk):
-            toks[i, plen - len(r.prompt) :] = r.prompt  # left-pad
+        max_new = max(r.max_new_tokens for r in chunk)
+        self._check_fits(plen, max_new)
+        if max_new == 0:
+            return [[] for _ in chunk]
+        # Bucket prompt length and decode length to powers of two so each
+        # bucket traces once; when a bucket would overflow max_seq, fall back
+        # to the exact size (an off-bucket trace either way — don't also pay
+        # for masked decode steps past max_new).
+        length = bucket_to(max_new, 2)
+        if plen + length > self.max_seq:
+            length = max_new
+        plen_b = min(bucket_to(plen, self.prompt_bucket), self.max_seq - length)
+
+        toks = self._pad_prompts(chunk, plen_b)
         caches = self.model.init_cache(b, self.max_seq, dtype=jnp.float32)
+        logits, caches = self._prefill(self.params, jnp.asarray(toks), caches)
+        mn = np.ones((b,), np.int32)
+        for i, r in enumerate(chunk):
+            mn[i] = r.max_new_tokens
+        ys, _ = self._decode_scan(
+            self.params, logits, caches, jnp.int32(plen_b), jnp.asarray(mn),
+            length,
+        )
+        mat = self._fetch(ys)            # the batch's single device->host sync
+        return [
+            [int(t) for t in mat[i, : chunk[i].max_new_tokens]]
+            for i in range(len(chunk))
+        ]
+
+    # --- seed driver: per-token Python loop (baseline / oracle) -----------
+
+    def _generate_batch_loop(self, chunk: list[Request]) -> list[list[int]]:
+        plen = max(len(r.prompt) for r in chunk)
+        self._check_fits(plen, max(r.max_new_tokens for r in chunk))
+        toks = self._pad_prompts(chunk, plen)
+        caches = self.model.init_cache(self.batch, self.max_seq, dtype=jnp.float32)
         logits, caches = self._prefill(self.params, jnp.asarray(toks), caches)
         token = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         max_new = max(r.max_new_tokens for r in chunk)
-        outs = [[] for _ in chunk]
+        outs: list[list[int]] = [[] for _ in chunk]
+        tok_h = self._fetch(token)                  # one sync per decoded step
         for i, r in enumerate(chunk):
-            outs[i].append(int(token[i, 0]))
+            if r.max_new_tokens > 0:
+                outs[i].append(int(tok_h[i, 0]))
         for t in range(max_new - 1):
             token, caches = self._step(
                 self.params, token, caches, jnp.int32(plen + t)
             )
+            tok_h = self._fetch(token)
             for i, r in enumerate(chunk):
                 if len(outs[i]) < r.max_new_tokens:
-                    outs[i].append(int(token[i, 0]))
+                    outs[i].append(int(tok_h[i, 0]))
         return outs

@@ -1,0 +1,209 @@
+"""Weight-stationary prepare/apply split: bit-exactness + cached products.
+
+The contract: :func:`repro.core.prepare_linear` may cache anything it wants,
+but ``apply_linear(prepared, x)`` must be bit-identical to
+``apply_linear(raw, x)`` in every execution mode and on every grid kind —
+the prepared path removes per-call weight work, never changes numerics.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, engine
+from repro.core.api import _lut_pack_cache
+from repro.core.prepared import PreparedLinear, prepare_linear
+
+K, F, B = 24, 12, 5
+
+
+def _q(mode, kind, bw=2, ba=4, p=3, **kw):
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(K, F)).astype(np.float32))
+    spec = api.LutLinearSpec(bw=bw, ba=ba, mode=mode, p=p,
+                             w_kind=kind, a_kind=kind, **kw)
+    return api.quantize_linear(w, spec, bias=jnp.ones((F,), jnp.float32))
+
+
+def _x(b=B, k=K):
+    rng = np.random.default_rng(1)
+    return jnp.asarray(rng.normal(size=(b, k)).astype(np.float32))
+
+
+@pytest.mark.parametrize("kind", ["int", "fp"])
+@pytest.mark.parametrize("mode", ["dequant", "lut", "stream", "pallas"])
+def test_prepared_bit_exact_all_modes_and_grids(mode, kind):
+    if mode == "pallas" and kind == "fp":
+        # pallas decode path takes the weight grid only; activations stay fp32
+        q = _q(mode, "int")
+        q = dataclasses.replace(q, spec=dataclasses.replace(q.spec, w_kind="fp"))
+    else:
+        q = _q(mode, kind)
+    pl = prepare_linear(q)
+    x = _x()
+    y_raw = api.apply_linear(q, x)
+    y_prep = api.apply_linear(pl, x)
+    assert np.array_equal(np.asarray(y_raw), np.asarray(y_prep)), mode
+
+
+def test_prepared_bit_exact_ragged_k_and_auto_p():
+    """Partial final group (pad-correction path) + perf-model p selection."""
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(26, 9)).astype(np.float32))   # K % p != 0
+    x = jnp.asarray(rng.normal(size=(4, 26)).astype(np.float32))
+    for mode in ("lut", "stream"):
+        spec = api.LutLinearSpec(bw=1, ba=3, mode=mode, p=None)     # auto p*
+        q = api.quantize_linear(w, spec)
+        pl = prepare_linear(q, n_hint=4)
+        assert np.array_equal(
+            np.asarray(api.apply_linear(q, x)), np.asarray(api.apply_linear(pl, x))
+        ), mode
+
+
+def test_wcanon_table_is_reordering_lut_at_every_perm_id():
+    """wcanon[m, g, pid] == reorder[wpk[m, g], pid] for ALL permutation ids —
+    the §IV-B reordering lookup folded into a weight-static table."""
+    q = _q("lut", "int", bw=2, ba=3, p=3)
+    pl = prepare_linear(q)
+    pack = _lut_pack_cache(2, 3, pl.p, "int", "int")
+    wpk = np.asarray(pl.wpk)
+    assert pl.wcanon.shape == (F, wpk.shape[1], math.factorial(pl.p))
+    assert np.array_equal(np.asarray(pl.wcanon), pack.reordering[wpk])
+
+
+def test_wcanon_size_cap_falls_back():
+    q = _q("lut", "int", bw=1, ba=3, p=4)
+    pl = prepare_linear(q, wcanon_max_entries=10)    # force the cap
+    assert pl.wcanon is None
+    # the wpk-only fast path still matches the raw layer exactly
+    x = _x()
+    assert np.array_equal(
+        np.asarray(api.apply_linear(q, x)), np.asarray(api.apply_linear(pl, x))
+    )
+
+
+def test_prepared_stream_stats_match_raw():
+    q = _q("stream", "int", bw=1, ba=3, p=4, tile_n=2)
+    pl = prepare_linear(q)
+    x = _x()
+    s_raw = api.stream_stats_for(q, x)
+    s_prep = api.stream_stats_for(pl, x)
+    assert dataclasses.asdict(s_raw) == dataclasses.asdict(s_prep)
+
+
+@pytest.mark.parametrize("mode", ["dequant", "lut", "stream", "pallas"])
+def test_stream_stats_work_on_prepared_layers_of_any_mode(mode):
+    """'regardless of q.spec.mode' holds for prepared layers too — non-stream
+    modes rebuild the stream products from the packed codes on the fly."""
+    q = _q(mode, "int", bw=1, ba=3, p=4)
+    pl = prepare_linear(q)
+    x = _x()
+    for probe in (q, pl):
+        s_exec = api.stream_stats_for(probe, x)
+        s_plan = api.stream_stats_for(probe, x, plan_only=True)
+        assert dataclasses.asdict(s_exec) == dataclasses.asdict(s_plan)
+
+
+def test_plan_only_stats_equal_executed_stats():
+    """stream_stats_for(plan_only=True) == the executed engine's stats,
+    field for field — counters derive from the plan alone."""
+    for tile_n in (None, 2, 3):
+        q = _q("stream", "int", bw=1, ba=3, p=4, tile_n=tile_n)
+        x = _x()
+        s_full = api.stream_stats_for(q, x)
+        s_plan = api.stream_stats_for(q, x, plan_only=True)
+        assert dataclasses.asdict(s_full) == dataclasses.asdict(s_plan), tile_n
+
+
+def test_prepared_is_pytree_and_jittable():
+    q = _q("dequant", "int")
+    pl = prepare_linear(q)
+    y_jit = jax.jit(lambda p_, x_: api.apply_linear(p_, x_))(pl, _x())
+    y_jit_raw = jax.jit(lambda q_, x_: api.apply_linear(q_, x_))(q, _x())
+    assert np.array_equal(np.asarray(y_jit), np.asarray(y_jit_raw))
+    # onehot (host-side product) only materializes for stream mode
+    assert pl.onehot is None
+    qs = _q("stream", "int", bw=1, ba=3, p=3)
+    pls = prepare_linear(qs)
+    assert isinstance(pls.onehot, np.ndarray)
+    assert pls.prepared_bytes > 0
+
+
+def test_prepare_params_walks_models():
+    """Model.prepare swaps every 2-D QuantizedLinear leaf; forward output of
+    the prepared tree matches the quantized tree."""
+    from repro.configs import get_config
+    from repro.models.model import build_model, prepare_params
+
+    cfg = get_config("stablelm-12b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = model.quantize(params, api.LutLinearSpec(bw=4, ba=4, mode="dequant"))
+    pparams = model.prepare(qparams)
+    n_prep = sum(
+        isinstance(l, PreparedLinear)
+        for l in jax.tree.leaves(
+            pparams, is_leaf=lambda x: isinstance(x, PreparedLinear)
+        )
+    )
+    assert n_prep > 0
+    n_raw = sum(
+        isinstance(l, api.QuantizedLinear)
+        for l in jax.tree.leaves(
+            pparams, is_leaf=lambda x: isinstance(x, api.QuantizedLinear))
+    )
+    assert n_raw == 0
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 6), dtype=np.int32))
+    yq, _, _ = model.forward(qparams, toks)
+    yp, _, _ = model.forward(pparams, toks)
+    np.testing.assert_allclose(np.asarray(yq), np.asarray(yp), rtol=1e-6, atol=1e-6)
+
+
+def test_engine_prepared_weight_products_bit_exact():
+    """Engine-level entry points: wpacked / wcanon_table / StreamWeights /
+    widx all reproduce the plain calls bit for bit."""
+    from repro.core import luts
+
+    pack = luts.build_lut_pack(1, 3, 3, with_packed=True)
+    rng = np.random.default_rng(3)
+    m, k, n = 8, 13, 6                                   # ragged K
+    wc = jnp.asarray(rng.integers(0, 2, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 8, (k, n)).astype(np.int32))
+    ref = engine.quantized_matmul_ref(wc, ac, pack.wgrid, pack.agrid)
+    prep = engine.prepare_stream_weights(np.asarray(wc), pack)
+    wpk = jnp.asarray(prep.wpk)
+    out = engine.canonical_lut_gemm(None, ac, pack, wpacked=wpk)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    wtab = jnp.asarray(pack.reordering)[wpk]
+    out = engine.canonical_lut_gemm(None, ac, pack, wcanon_table=wtab)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    out, stats = engine.streamed_lut_gemm(None, ac, pack, prep=prep)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    _, stats_raw = engine.streamed_lut_gemm(wc, ac, pack)
+    assert dataclasses.asdict(stats) == dataclasses.asdict(stats_raw)
+    out = engine.packed_lut_gemm(None, ac, pack, widx=wpk)
+    want = engine.packed_lut_gemm(wc, ac, pack)
+    assert np.array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_stacked_leaves_prepare_under_vmap_only():
+    """prepare_linear itself rejects stacked codes; prepare_params vmaps them
+    and the prepared stack dequantizes identically (MoE einsum path)."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(4, K, F)).astype(np.float32))
+    from repro.models.model import _quantize_raw, maybe_dequant, prepare_params
+
+    q = _quantize_raw(w, api.LutLinearSpec(bw=2, ba=4))
+    with pytest.raises(ValueError):
+        prepare_linear(q)
+    pl = prepare_params({"moe": {"w_up": q}})["moe"]["w_up"]
+    assert isinstance(pl, PreparedLinear) and pl.codes.ndim == 3
+    np.testing.assert_array_equal(
+        np.asarray(maybe_dequant(q, jnp.float32)),
+        np.asarray(maybe_dequant(pl, jnp.float32)),
+    )

@@ -71,6 +71,95 @@ def test_tile_n_validation_and_clamp():
     assert plan.tile_n == 4 and len(plan.tiles) == 1
 
 
+# --- buffer-budget tile auto-selection (ISSUE 3 satellite) -----------------
+
+# fig13's default GEMM (3072, 768, 128) per-bank M,K at three batch widths,
+# quantized W1A3 p=4 — the shapes the streamed engines are benchmarked on.
+_FIG13_SHAPES = [(192, 768, 16), (192, 768, 128), (3072, 768, 128)]
+_FIG13_CFG = dict(bw=1, ba=3, p=4)
+
+
+def _fig13_ids(k, n, seed=0):
+    """Canonicalization ids of random W1A3 p=4 activations for a [k, n] tile."""
+    from repro.core import engine, luts
+
+    rng = np.random.default_rng(seed)
+    pack = luts.build_lut_pack(**_FIG13_CFG)
+    ac = rng.integers(0, 1 << _FIG13_CFG["ba"], (k, n)).astype(np.int32)
+    idx = engine.canonicalize_activations_np(ac, pack)
+    return idx.msrank, idx.permid, pack
+
+
+@pytest.mark.parametrize("m,k,n", _FIG13_SHAPES)
+def test_auto_tile_n_fits_budget_and_is_widest(m, k, n):
+    """The selected tile's worst-case unique-slice set fits the budget, and
+    the next-wider candidate would not (or the tile already spans all N)."""
+    from repro.core.engine import _slice_bytes
+
+    msr, pid, pack = _fig13_ids(k, n)
+    sb = _slice_bytes(pack)
+    for budget in (sb * 8, sb * 64, sb * 512, sb * 10**6):
+        tn = stream_plan.auto_tile_n(
+            msr, pid, buffer_bytes=budget, slice_bytes=sb
+        )
+        assert 1 <= tn <= n
+        worst = stream_plan.max_unique_slices(msr, pid, tn)
+        # either it fits, or nothing fits and we bottomed out at 1 column
+        assert worst * sb <= budget or tn == 1
+        if tn < n:
+            # the next candidate up (double, clamped to N) must overflow
+            wider = min(2 * tn, n)
+            assert stream_plan.max_unique_slices(msr, pid, wider) * sb > budget
+        # plan_stream(buffer_bytes=...) picks the same width
+        plan = stream_plan.plan_stream(
+            msr, pid, buffer_bytes=budget, slice_bytes=sb
+        )
+        assert plan.tile_n == tn
+
+
+def test_auto_tile_threads_through_engine_and_spec():
+    """tile_n=None + buffer_bytes=... at the engine/API level stays exact and
+    obeys the budget."""
+    import jax.numpy as jnp
+
+    from repro.core import api, engine, luts
+
+    pack = luts.build_lut_pack(**_FIG13_CFG)
+    rng = np.random.default_rng(1)
+    m, k, n = 16, 32, 24
+    wc = jnp.asarray(rng.integers(0, 2, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 8, (k, n)).astype(np.int32))
+    ref = engine.quantized_matmul_ref(wc, ac, pack.wgrid, pack.agrid)
+    budget = engine._slice_bytes(pack) * 12
+    out, stats = engine.streamed_lut_gemm(wc, ac, pack, buffer_bytes=budget)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    assert stats.tiles >= 2            # the budget forced tiling
+    # spec-level threading: LutLinearSpec(buffer_bytes=...)
+    w = jnp.asarray(rng.normal(size=(k, 8)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    spec = api.LutLinearSpec(bw=1, ba=3, mode="stream", p=4,
+                             buffer_bytes=budget)
+    q = api.quantize_linear(w, spec)
+    y = api.apply_linear(q, x)
+    q_lut = api.QuantizedLinear(
+        codes=q.codes, scale=q.scale, bias=None,
+        spec=api.LutLinearSpec(bw=1, ba=3, mode="lut", p=4), k=q.k,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(api.apply_linear(q_lut, x))
+    )
+    st = api.stream_stats_for(q, x, plan_only=True)
+    assert st.tiles == api.stream_stats_for(q, x).tiles
+
+
+def test_auto_tile_n_validation():
+    msr, pid = _random_ids(3, 4, 5, 5)
+    with pytest.raises(ValueError):
+        stream_plan.auto_tile_n(msr, pid, buffer_bytes=0, slice_bytes=4)
+    with pytest.raises(ValueError):
+        stream_plan.plan_stream(msr, pid, buffer_bytes=64)  # missing slice_bytes
+
+
 def test_constant_addresses_collapse_to_one_slice():
     g, n = 4, 6
     msr = np.full((g, n), 7)
