@@ -428,6 +428,25 @@ _SERVE_PROMPT_LENS = [3, 4, 5, 6, 7, 9, 10, 11, 12, 13, 14, 15, 17, 18, 19, 21,
                       22, 23, 25, 26, 27, 29]
 _SERVE_MAX_NEW = 32
 
+# Continuous-vs-chunked traffic: a Poisson-ish bimodal arrival mix (short
+# chat replies interleaved with long generations, ragged prompt lengths).
+# Chunked scheduling decodes every chunk to its worst-case budget; the
+# continuous scheduler re-admits into a slot the moment its request
+# finishes, so the short requests stop paying for the long ones.
+_SERVE_CONT_BATCH = 2
+_SERVE_CONT_N_REQS = 40
+
+
+def _serve_ragged_arrivals():
+    """Deterministic (plen, max_new) draws for the arrival mix above."""
+    rng = np.random.default_rng(7)
+    out = []
+    for i in range(_SERVE_CONT_N_REQS):
+        plen = int(1 + rng.poisson(6)) % 24 + 1
+        max_new = int(1 + rng.poisson(2)) if i % 2 == 0 else int(16 + rng.poisson(8))
+        out.append((plen, min(max_new, 30)))
+    return out
+
 
 def serve_decode_benchmark():
     """Weight-stationary serving (§V-B): prepared scan decode vs seed loop.
@@ -438,6 +457,12 @@ def serve_decode_benchmark():
     bucketed ``lax.scan`` decode (one sync per request batch).  Both passes
     are timed cold (serving a fresh ragged request set, compiles included —
     the realistic serving cost) and warm (same set again, steady state).
+
+    A second comparison serves the Poisson-ish bimodal arrival mix
+    (:func:`_serve_ragged_arrivals`) through the **continuous** in-flight
+    scheduler vs the **chunked** fixed-batch scheduler on the same prepared
+    params — same tokens out (pad-masked prefill makes scheduling invisible
+    in the generations), fewer wasted worst-case decode steps in.
     Numbers land in :data:`LAST_SERVE_PAYLOAD` → ``BENCH_serve.json``.
     """
     global LAST_SERVE_PAYLOAD
@@ -471,25 +496,47 @@ def serve_decode_benchmark():
     total_tokens = len(reqs) * _SERVE_MAX_NEW
     n_batches = len(reqs)                       # batch=1 -> one request each
 
-    def run(engine):
+    def run(engine, request_set):
         t0 = time.perf_counter()
-        outs = engine.generate(reqs)
+        outs = engine.generate(request_set)
         cold = time.perf_counter() - t0
-        syncs = engine.host_syncs
+        syncs = engine.host_syncs            # cumulative: capture post-cold
         t0 = time.perf_counter()
-        outs2 = engine.generate(reqs)
+        outs2 = engine.generate(request_set)
         warm = time.perf_counter() - t0
         assert outs == outs2, "greedy decode must be deterministic"
         return outs, cold, warm, syncs
 
     eng_loop = ServeEngine(model, qparams, batch=1, max_seq=64, decode="loop")
-    outs_loop, cold_l, warm_l, syncs_l = run(eng_loop)
+    outs_loop, cold_l, warm_l, syncs_l = run(eng_loop, reqs)
     eng_scan = ServeEngine(model, pparams, batch=1, max_seq=64, decode="scan")
-    outs_scan, cold_s, warm_s, syncs_s = run(eng_scan)
+    outs_scan, cold_s, warm_s, syncs_s = run(eng_scan, reqs)
+
+    # --- continuous in-flight batching vs the fixed-chunk scheduler -------
+    arrivals = _serve_ragged_arrivals()
+    creqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, pl).astype(np.int32),
+                max_new_tokens=mn)
+        for pl, mn in arrivals
+    ]
+    ctokens = sum(mn for _, mn in arrivals)
+
+    eng_chunk = ServeEngine(model, pparams, batch=_SERVE_CONT_BATCH,
+                            max_seq=64, decode="chunked")
+    outs_ch, cold_ch, warm_ch, syncs_ch = run(eng_chunk, creqs)
+    eng_cont = ServeEngine(model, pparams, batch=_SERVE_CONT_BATCH,
+                           max_seq=64, decode="scan")
+    outs_co, cold_co, warm_co, syncs_co = run(eng_cont, creqs)
+    # Pad-masked prefill makes scheduling invisible in the tokens: both
+    # schedulers must emit identical generations for every request.
+    assert outs_co == outs_ch, "continuous vs chunked token mismatch"
 
     tps = lambda dt: total_tokens / dt
+    ctps = lambda dt: ctokens / dt
     cold_speedup = tps(cold_s) / tps(cold_l)
     warm_speedup = tps(warm_s) / tps(warm_l)
+    cont_cold = ctps(cold_co) / ctps(cold_ch)
+    cont_warm = ctps(warm_co) / ctps(warm_ch)
     rows = [
         ("serve/unprepared_loop/cold", _us(cold_l / total_tokens),
          f"tokens_per_s={tps(cold_l):.1f};syncs_per_batch={syncs_l / n_batches:.1f}"),
@@ -501,6 +548,14 @@ def serve_decode_benchmark():
          f"tokens_per_s={tps(warm_s):.1f}"),
         ("serve/speedup", "",
          f"cold={cold_speedup:.2f}x;warm={warm_speedup:.2f}x;prepare_s={prepare_s:.2f}"),
+        ("serve/chunked/ragged_arrivals", _us(cold_ch / ctokens),
+         f"tokens_per_s={ctps(cold_ch):.1f};warm_tokens_per_s={ctps(warm_ch):.1f};"
+         f"syncs={syncs_ch}"),
+        ("serve/continuous/ragged_arrivals", _us(cold_co / ctokens),
+         f"tokens_per_s={ctps(cold_co):.1f};warm_tokens_per_s={ctps(warm_co):.1f};"
+         f"syncs={syncs_co}"),
+        ("serve/continuous_vs_chunked", "",
+         f"cold={cont_cold:.2f}x;warm={cont_warm:.2f}x"),
     ]
     LAST_SERVE_PAYLOAD = dict(
         section="serve",
@@ -519,6 +574,19 @@ def serve_decode_benchmark():
             prepare_seconds=prepare_s,
         ),
         speedup=dict(cold=cold_speedup, warm=warm_speedup),
+        continuous_vs_chunked=dict(
+            batch=_SERVE_CONT_BATCH,
+            arrivals=[dict(prompt_len=pl, max_new=mn) for pl, mn in arrivals],
+            total_tokens=ctokens,
+            chunked=dict(cold_tokens_per_s=ctps(cold_ch),
+                         warm_tokens_per_s=ctps(warm_ch),
+                         host_syncs=syncs_ch),
+            continuous=dict(cold_tokens_per_s=ctps(cold_co),
+                            warm_tokens_per_s=ctps(warm_co),
+                            host_syncs=syncs_co,
+                            admission_waves=syncs_co),
+            speedup=dict(cold=cont_cold, warm=cont_warm),
+        ),
         headline=dict(speedup=cold_speedup),
     )
     return rows

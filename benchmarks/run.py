@@ -18,8 +18,10 @@ Sections:
               tiled/deduplicated streamed engine vs the seed per-slice loop;
               also writes BENCH_stream.json at the repo root
   serve       weight-stationary serving: prepared params + scan decode vs the
-              seed per-token loop (tokens/s, host-sync counts) at the fig13
-              default quant config; writes BENCH_serve.json at the repo root
+              seed per-token loop, and continuous in-flight batching vs the
+              fixed-chunk scheduler under a ragged Poisson-ish arrival mix
+              (tokens/s, host-sync counts) at the fig13 default quant
+              config; writes BENCH_serve.json at the repo root
   roofline    TPU v5e roofline terms per (arch × shape) from the dry-run
               artifacts under runs/dryrun/.  Reading the artifacts needs no
               devices; *generating* them does — run the dry-run under forced

@@ -29,21 +29,23 @@ print(f"params: dense {dense_bytes:,} B -> LoCaLUT-packed {quant_bytes:,} B "
       f"({dense_bytes/quant_bytes:.2f}x smaller)")
 
 # Weight-stationary serving (§V-B): freeze every per-call weight product once;
-# the decode loop then runs as one on-device scan with a single host sync per
-# request batch.
+# the decode loop then runs on device as continuous in-flight batches — a
+# freed KV slot is re-admitted mid-decode, and prompts are left-padded into
+# power-of-two buckets behind a pad mask (padding never changes the tokens).
 pparams = model.prepare(qparams)
 eng = ServeEngine(model, pparams, batch=2, max_seq=48)
 rng = np.random.default_rng(0)
 requests = [
     Request(prompt=rng.integers(0, cfg.vocab_size, 1 + i % 7).astype(np.int32),
-            max_new_tokens=8)
+            max_new_tokens=2 + 5 * (i % 2))   # ragged budgets: slots free early
     for i in range(6)
 ]
 t0 = time.time()
 outputs = eng.generate(requests)
 dt = time.time() - t0
 print(f"served {len(requests)} ragged requests in {dt:.2f}s (incl. compile), "
-      f"{eng.host_syncs} host syncs")
+      f"{eng.host_syncs} host syncs across {len(eng.admissions)} admissions")
+print(f"in-flight admission order (request -> slot): {eng.admissions}")
 for i, out in enumerate(outputs):
     print(f"  request {i} ({len(requests[i].prompt)} prompt tokens) -> {out}")
 print("serve example OK")

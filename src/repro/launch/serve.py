@@ -38,9 +38,15 @@ def main():
     ap.add_argument("--no-prepare", dest="prepare", action="store_false",
                     help="serve raw QuantizedLinear params (skip the "
                          "weight-stationary prepare step)")
-    ap.add_argument("--decode", default="scan", choices=["scan", "loop"],
-                    help="fused lax.scan decode (1 host sync/batch) or the "
-                         "seed per-token loop")
+    ap.add_argument("--decode", default="scan",
+                    choices=["scan", "chunked", "loop"],
+                    help="continuous in-flight batching (1 host sync per "
+                         "admission wave), the fixed-chunk fused-scan "
+                         "baseline, or the seed per-token loop")
+    ap.add_argument("--prompt-bucket", type=int, default=8,
+                    help="power-of-two prompt-length bucketing floor (1 "
+                         "disables bucketing; pad-masked prefill makes the "
+                         "bucket padding output-invariant either way)")
     ap.add_argument("--profile", default="baseline", choices=["baseline", "serve"],
                     help="apply the EXPERIMENTS.md §4-validated perf profile")
     args = ap.parse_args()
@@ -66,7 +72,7 @@ def main():
                   f"{time.time()-t0:.1f}s")
 
     eng = ServeEngine(model, params, batch=args.batch, max_seq=args.max_seq,
-                      decode=args.decode)
+                      decode=args.decode, prompt_bucket=args.prompt_bucket)
     rng = np.random.default_rng(0)
     reqs = [
         Request(
@@ -80,7 +86,10 @@ def main():
     dt = time.time() - t0
     total_tokens = sum(len(o) for o in outs)
     print(f"served {len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s incl. compile)")
+          f"({total_tokens/dt:.1f} tok/s incl. compile), "
+          f"{eng.host_syncs} host syncs")
+    if args.decode == "scan":
+        print(f"admission order (request -> slot): {eng.admissions}")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o}")
 

@@ -43,6 +43,42 @@ def _split_heads(x: Array, n: int) -> Array:
     return x.reshape(b, s, n, -1)
 
 
+def _cache_write(cache_arr: Array, new: Array, pos) -> Array:
+    """Write ``new [B, S, ...]`` into ``cache_arr`` at sequence offset ``pos``.
+
+    ``pos`` may be a scalar (all rows share the offset — prefill and chunked
+    decode) or a ``[B]`` vector of per-slot offsets (continuous-batching
+    decode, where ``S == 1`` and every slot sits at its own depth).
+    """
+    p = jnp.asarray(pos)
+    new = new.astype(cache_arr.dtype)
+    if p.ndim:
+        b = cache_arr.shape[0]
+        return cache_arr.at[jnp.arange(b), p].set(new[:, 0])
+    starts = (0, pos) + (0,) * (cache_arr.ndim - 2)
+    return jax.lax.dynamic_update_slice(cache_arr, new, starts)
+
+
+def _key_mask(kpos: Array, qpos: Array, pad_len, window) -> Array:
+    """Causal key-validity mask in *logical* coordinates.
+
+    ``kpos`` are buffer key positions ``[1, T]``; ``qpos`` logical query
+    positions ``[B, S, 1]``.  With left-padding, ``pad_len [B]`` shifts keys
+    into logical coordinates (buffer - pad) and masks the pad positions out
+    entirely (logical < 0) — don't-care positions, like ReducedLUT's
+    don't-care LUT entries: present in the buffer, never attended.
+    """
+    if pad_len is not None:
+        kpos = kpos - pad_len[:, None]
+    k = kpos[:, None, :]                                   # [B|1, 1, T]
+    m = k <= qpos
+    if pad_len is not None:
+        m &= k >= 0
+    if window is not None:
+        m &= k > qpos - window
+    return m
+
+
 def _attend(
     q: Array,            # [B, S, H, hd]
     k: Array,            # [B, T, Hkv, hd]
@@ -103,12 +139,13 @@ def _attend_chunked(
     q: Array,            # [B, S, H, hd]
     k: Array,            # [B, T, Hkv, hd]
     v: Array,
-    positions: Array,    # [B, S] query positions
+    positions: Array,    # [B, S] query positions (logical)
     *,
     window: Optional[int],
     softcap_val: Optional[float],
     causal: bool,
     bf16_operands: bool = False,
+    pad_len: Optional[Array] = None,   # [B] left-pad lengths (key don't-cares)
 ) -> Array:
     b, s, h, hd = q.shape
     nc = s // CHUNK_SIZE
@@ -117,12 +154,13 @@ def _attend_chunked(
 
     def body(_, inp):
         q_i, pos_i = inp                                   # [B, C, H, hd], [B, C]
-        kpos = jnp.arange(k.shape[1])[None, None, :]
-        m = jnp.ones((b, CHUNK_SIZE, k.shape[1]), bool) if not causal else (
-            kpos <= pos_i[:, :, None]
-        )
-        if window is not None:
-            m &= kpos > pos_i[:, :, None] - window
+        kpos = jnp.arange(k.shape[1])[None, :]
+        if causal:
+            m = _key_mask(kpos, pos_i[:, :, None], pad_len, window)
+        else:
+            m = jnp.ones((b, CHUNK_SIZE, k.shape[1]), bool)
+            if window is not None:
+                m &= kpos[:, None, :] > pos_i[:, :, None] - window
         o = _attend(q_i, k, v, mask=m[:, None], softcap_val=softcap_val,
                     bf16_operands=bf16_operands)
         return None, o
@@ -149,8 +187,16 @@ def _quant_rows(x: Array) -> tuple[Array, Array]:
 
 def _ring_update(cache_arr: Array, new: Array, global_start, tail: int):
     """Write the last ``tail`` tokens of ``new`` into the ring buffer at their
-    ``global_position % W`` slots."""
+    ``global_position % W`` slots.  ``global_start`` may be a per-slot ``[B]``
+    vector (continuous-batching decode)."""
     w = cache_arr.shape[1]
+    gs = jnp.asarray(global_start)
+    if gs.ndim:
+        b = cache_arr.shape[0]
+        idx = (gs[:, None] + jnp.arange(tail)[None, :]) % w          # [B, tail]
+        return cache_arr.at[jnp.arange(b)[:, None], idx].set(
+            new[:, -tail:].astype(cache_arr.dtype)
+        )
     idx = (global_start + jnp.arange(tail)) % w
     return cache_arr.at[:, idx].set(new[:, -tail:].astype(cache_arr.dtype))
 
@@ -160,12 +206,13 @@ def gqa_attention(
     x: Array,
     *,
     cfg: ModelConfig,
-    positions: Array,                  # [B, S] absolute positions
+    positions: Array,                  # [B, S] logical positions (RoPE + mask)
     cache: Optional[dict] = None,      # {"k": [B, Smax, Hkv, hd], "v": ...}
-    pos: Optional[Array] = None,       # scalar write offset for decode
+    pos: Optional[Array] = None,       # cache write offset: scalar or [B]
     window: Optional[int] = None,
     causal: bool = True,
     ctx=None,                          # ShardCtx (prefill head-sharding hint)
+    pad_len: Optional[Array] = None,   # [B] left-pad lengths: pad keys masked
 ) -> tuple[Array, Optional[dict]]:
     b, s, _ = x.shape
     hd = cfg.hd
@@ -201,8 +248,10 @@ def gqa_attention(
             kc = _ring_update(cache["k"], k, pos, 1)
             vc = _ring_update(cache["v"], v, pos, 1)
             slots = jnp.arange(w)
-            kpos_global = pos - ((pos - slots) % w)        # in (pos-W, pos]
-            m = jnp.broadcast_to((kpos_global >= 0)[None, None, :], (b, 1, w))
+            pos2 = jnp.reshape(jnp.asarray(pos), (-1, 1))  # [1|B, 1]
+            kpos_global = pos2 - ((pos2 - slots[None]) % w)  # in (pos-W, pos]
+            start = 0 if pad_len is None else pad_len[:, None]
+            m = jnp.broadcast_to((kpos_global >= start)[:, None, :], (b, 1, w))
             out = _attend(q, kc, vc, mask=m[:, None],
                           softcap_val=cfg.attn_logit_softcap,
                           bf16_operands=cfg.attend_bf16)
@@ -211,10 +260,14 @@ def gqa_attention(
                 out = _attend_chunked(
                     q, k, v, positions, window=window,
                     softcap_val=cfg.attn_logit_softcap, causal=True,
-                    bf16_operands=cfg.attend_bf16,
+                    bf16_operands=cfg.attend_bf16, pad_len=pad_len,
                 )
             else:
-                m = causal_mask(s, s, window=window)
+                if pad_len is None:
+                    m = causal_mask(s, s, window=window)
+                else:
+                    m = _key_mask(jnp.arange(s)[None, :],
+                                  positions[:, :, None], pad_len, window)[:, None]
                 out = _attend(q, k, v, mask=m, softcap_val=cfg.attn_logit_softcap,
                               bf16_operands=cfg.attend_bf16)
             tail = min(s, w)
@@ -228,10 +281,10 @@ def gqa_attention(
     if cache is not None and "k_s" in cache:
         k8, ks = _quant_rows(k)
         v8, vs = _quant_rows(v)
-        kc8 = jax.lax.dynamic_update_slice(cache["k"], k8, (0, pos, 0, 0))
-        ksc = jax.lax.dynamic_update_slice(cache["k_s"], ks, (0, pos, 0))
-        vc8 = jax.lax.dynamic_update_slice(cache["v"], v8, (0, pos, 0, 0))
-        vsc = jax.lax.dynamic_update_slice(cache["v_s"], vs, (0, pos, 0))
+        kc8 = _cache_write(cache["k"], k8, pos)
+        ksc = _cache_write(cache["k_s"], ks, pos)
+        vc8 = _cache_write(cache["v"], v8, pos)
+        vsc = _cache_write(cache["v_s"], vs, pos)
         kc = kc8.astype(jnp.float32) * ksc[..., None]
         vc = vc8.astype(jnp.float32) * vsc[..., None]
         new_cache = {"k": kc8, "k_s": ksc, "v": vc8, "v_s": vsc}
@@ -240,36 +293,30 @@ def gqa_attention(
             out = _attend_chunked(
                 q, kc, vc, positions, window=window,
                 softcap_val=cfg.attn_logit_softcap, causal=True,
-                bf16_operands=cfg.attend_bf16,
+                bf16_operands=cfg.attend_bf16, pad_len=pad_len,
             )
         else:
-            kpos = jnp.arange(t)[None, :]
-            qpos = positions[:, :, None]
-            m = kpos[:, None, :] <= qpos
-            if window is not None:
-                m &= kpos[:, None, :] > qpos - window
+            m = _key_mask(jnp.arange(t)[None, :], positions[:, :, None],
+                          pad_len, window)
             out = _attend(q, kc, vc, mask=m[:, None], softcap_val=cfg.attn_logit_softcap,
                           bf16_operands=cfg.attend_bf16)
         y = linear(p["wo"], out.reshape(b, s, cfg.n_heads * hd))
         return y, new_cache
 
     if cache is not None:
-        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        kc = _cache_write(cache["k"], k, pos)
+        vc = _cache_write(cache["v"], v, pos)
         new_cache = {"k": kc, "v": vc}
         if s > CHUNK_THRESHOLD and s % CHUNK_SIZE == 0:
             out = _attend_chunked(
                 q, kc, vc, positions, window=window,
                 softcap_val=cfg.attn_logit_softcap, causal=True,
-                bf16_operands=cfg.attend_bf16,
+                bf16_operands=cfg.attend_bf16, pad_len=pad_len,
             )
         else:
             t = kc.shape[1]
-            kpos = jnp.arange(t)[None, :]
-            qpos = positions[:, :, None]                    # [B, S, 1]
-            m = kpos[:, None, :] <= qpos                    # [B, S, T]
-            if window is not None:
-                m &= kpos[:, None, :] > qpos - window
+            m = _key_mask(jnp.arange(t)[None, :], positions[:, :, None],
+                          pad_len, window)                  # [B, S, T]
             out = _attend(q, kc, vc, mask=m[:, None], softcap_val=cfg.attn_logit_softcap,
                           bf16_operands=cfg.attend_bf16)
     else:
@@ -358,8 +405,9 @@ def mla_attention(
     cfg: ModelConfig,
     positions: Array,
     cache: Optional[dict] = None,   # {"ckv": [B, Smax, lora], "krope": [B, Smax, rope]}
-    pos: Optional[Array] = None,
+    pos: Optional[Array] = None,    # cache write offset: scalar or [B]
     ctx=None,                       # ShardCtx (prefill head-sharding hint)
+    pad_len: Optional[Array] = None,  # [B] left-pad lengths: pad keys masked
 ) -> tuple[Array, Optional[dict]]:
     m = cfg.mla
     b, s, _ = x.shape
@@ -380,20 +428,11 @@ def mla_attention(
     q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32), wkup)
 
     if cache is not None:
-        ckv_c = jax.lax.dynamic_update_slice(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, pos, 0)
-        )
-        krope_c = jax.lax.dynamic_update_slice(
-            cache["krope"], krope.astype(cache["krope"].dtype), (0, pos, 0)
-        )
-        t = ckv_c.shape[1]
-        kpos = jnp.arange(t)[None, None, :]
-        mask = kpos <= positions[:, :, None]
+        ckv_c = _cache_write(cache["ckv"], ckv, pos)
+        krope_c = _cache_write(cache["krope"], krope, pos)
         new_cache = {"ckv": ckv_c, "krope": krope_c}
     else:
         ckv_c, krope_c = ckv, krope
-        t = s
-        mask = jnp.arange(t)[None, None, :] <= positions[:, :, None]
         new_cache = None
 
     scale = 1.0 / jnp.sqrt(m.qk_nope_dim + m.qk_rope_dim).astype(jnp.float32)
@@ -432,7 +471,8 @@ def mla_attention(
             + jnp.einsum("bshr,btr->bhst", q_rope_i, krope_f,
                          preferred_element_type=jnp.float32)
         ) * scale
-        mk = jnp.arange(ckv_f.shape[1])[None, None, :] <= pos_i[:, :, None]
+        mk = _key_mask(jnp.arange(ckv_f.shape[1])[None, :],
+                       pos_i[:, :, None], pad_len, None)
         sc = jnp.where(mk[:, None], sc, -1e30)
         w = jax.nn.softmax(sc, axis=-1)
         if cfg.attend_bf16:

@@ -172,21 +172,30 @@ class Model:
     def forward(self, params, tokens, **kw):
         return transformer.forward(params, self.cfg, tokens, **kw)
 
-    def prefill(self, params, tokens, caches, *, prefix_embeds=None, ctx=None):
+    def prefill(self, params, tokens, caches, *, prefix_embeds=None, ctx=None,
+                pad_len=None):
         """Fill caches for positions [0, S); returns (last-pos logits [B,1,V],
         caches).  Full-sequence logits are never materialized — at 32k×256k
-        vocab that tensor alone would be terabytes."""
+        vocab that tensor alone would be terabytes.
+
+        ``pad_len [B]`` marks per-row left-padding: padded positions become
+        attention don't-cares and logical positions shift, so a left-padded
+        (e.g. bucketed) prompt prefills output-identically to the unpadded
+        one on attention archs."""
         logits, caches, _ = transformer.forward(
             params, self.cfg, tokens, caches=caches, pos=jnp.int32(0),
             prefix_embeds=prefix_embeds, is_prefill=True, ctx=ctx,
-            last_token_only=True,
+            last_token_only=True, pad_len=pad_len,
         )
         return logits, caches
 
-    def decode_step(self, params, token, caches, pos, *, ctx=None):
-        """One token per sequence: token [B, 1], pos scalar int32."""
+    def decode_step(self, params, token, caches, pos, *, ctx=None, pad_len=None):
+        """One token per sequence: token [B, 1]; ``pos`` is the cache write
+        offset — scalar int32, or an int32 ``[B]`` vector of per-slot offsets
+        (continuous batching, where slots sit at different depths)."""
         logits, caches, _ = transformer.forward(
-            params, self.cfg, token, caches=caches, pos=pos, ctx=ctx
+            params, self.cfg, token, caches=caches, pos=pos, ctx=ctx,
+            pad_len=pad_len,
         )
         return logits, caches
 

@@ -190,13 +190,15 @@ class RunState:
     """Closure-carried context for one forward pass."""
 
     cfg: ModelConfig
-    positions: Array                     # [B, S]
-    pos: Optional[Array]                 # cache write offset (None = no cache)
+    positions: Array                     # [B, S] logical positions
+    pos: Optional[Array]                 # cache write offset (None = no cache;
+                                         # scalar, or [B] per-slot offsets)
     shared_attn: Optional[dict] = None   # zamba2 shared block params
     enc_out: Optional[Array] = None      # whisper encoder output
     is_prefill: bool = False
     ctx: Any = None                      # ShardCtx
     remat: bool = False                  # activation-checkpoint each unit
+    pad_len: Optional[Array] = None      # [B] left-pad lengths (key don't-cares)
 
 
 def _apply_sublayer(
@@ -210,12 +212,12 @@ def _apply_sublayer(
         if cfg.attn_kind == "mla":
             a, new_attn_cache = attention.mla_attention(
                 p["attn"], h, cfg=cfg, positions=rs.positions, cache=cache,
-                pos=rs.pos, ctx=rs.ctx,
+                pos=rs.pos, ctx=rs.ctx, pad_len=rs.pad_len,
             )
         else:
             a, new_attn_cache = attention.gqa_attention(
                 p["attn"], h, cfg=cfg, positions=rs.positions, cache=cache,
-                pos=rs.pos, window=window, ctx=rs.ctx,
+                pos=rs.pos, window=window, ctx=rs.ctx, pad_len=rs.pad_len,
             )
         x = x + a
         h = norm(p["ffn_norm"], x, nk, eps)
@@ -243,6 +245,7 @@ def _apply_sublayer(
         a, new_a = attention.gqa_attention(
             sp["attn"], h, cfg=cfg, positions=rs.positions,
             cache=cache["attn"] if cache else None, pos=rs.pos,
+            pad_len=rs.pad_len,
         )
         x = x + a
         h = norm(sp["ffn_norm"], x, nk, eps)
@@ -260,7 +263,8 @@ def _apply_sublayer(
         h = norm(p["attn_norm"], x, nk, eps)
         self_cache = {"k": cache["k"], "v": cache["v"]} if cache is not None else None
         a, new_self = attention.gqa_attention(
-            p["attn"], h, cfg=cfg, positions=rs.positions, cache=self_cache, pos=rs.pos
+            p["attn"], h, cfg=cfg, positions=rs.positions, cache=self_cache,
+            pos=rs.pos, pad_len=rs.pad_len,
         )
         x = x + a
         h = norm(p["cross_norm"], x, nk, eps)
@@ -415,13 +419,16 @@ def forward(
     tokens: Array,                     # [B, S] int32
     *,
     caches: Optional[list] = None,
-    pos: Optional[Array] = None,       # cache write offset
+    pos: Optional[Array] = None,       # cache write offset: scalar or [B]
     prefix_embeds: Optional[Array] = None,  # [B, P, frontend_dim] stub frontend
     is_prefill: bool = False,
     ctx=None,
     remat: bool = False,
     return_hidden: bool = False,       # skip the LM head (chunked-loss path)
     last_token_only: bool = False,     # head over the final position only
+    pad_len: Optional[Array] = None,   # [B] left-pad lengths; pad positions
+                                       # become attention don't-cares and
+                                       # logical positions shift by -pad_len
 ) -> tuple[Array, Optional[list], Array]:
     """Returns (logits [B, S', V] — or hidden [B, S', D], new_caches, aux)."""
     b, s = tokens.shape
@@ -439,7 +446,14 @@ def forward(
     if pos is None:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     else:
-        positions = pos + jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        pos_a = jnp.asarray(pos)
+        off = pos_a[:, None] if pos_a.ndim else pos_a      # [B,1] | scalar
+        positions = off + jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if pad_len is not None:
+        # Left-padded rows: real token i sits at buffer index pad+i but
+        # logical position i.  RoPE/sinusoid and all causal comparisons use
+        # logical positions; cache writes keep using buffer offsets (rs.pos).
+        positions = positions - pad_len[:, None]
 
     if cfg.rope_kind == "none":
         # Absolute sinusoidal positions for rope-less decoders (whisper/OPT).
@@ -454,6 +468,7 @@ def forward(
         is_prefill=is_prefill,
         ctx=ctx,
         remat=remat,
+        pad_len=pad_len,
     )
     x, new_caches, aux = run_segments(rs, params["segments"], x, caches)
     x = norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)

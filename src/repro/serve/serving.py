@@ -1,32 +1,58 @@
-"""Serving: prefill + decode steps and a batched request driver.
+"""Serving: pad-masked prefill + continuous in-flight batching driver.
 
 The paper's deployment regime (§V-B, §VI-J): LoCaLUT-quantized projections do
 the GEMMs; prefill processes the prompt, decode emits one token per step
-against the KV cache.  ``ServeEngine`` is the small-scale continuous-batching
-driver used by the examples; the jitted step functions are the objects the
+against the KV cache.  ``ServeEngine`` is the continuous-batching driver used
+by the examples and benchmarks; the jitted step functions are the objects the
 multi-pod dry-run lowers at scale.
 
 Serving is **weight-stationary** end to end: prepare the params once
-(``Model.prepare``), then the decode loop runs as a single on-device
-``lax.scan`` with donated KV caches (``decode="scan"``, the default) —
+(``Model.prepare``), then decode runs entirely on device.  Three schedulers
+share the jitted prefill/decode programs:
 
-* prompt lengths are bucketed to powers of two, so prefill compiles once per
-  bucket instead of once per ragged length;
-* the whole token matrix materializes in ONE device→host transfer per request
-  batch (the seed loop synced per token, per slot);
-* per-request ``max_new_tokens`` is honored inside the scan by masking
-  finished slots.
+* ``decode="scan"`` (default) — **continuous in-flight batching**: a
+  slot-based scheduler admits queued requests into KV-cache slots the moment
+  earlier requests finish (mid-decode, not per-chunk).  Each slot carries its
+  own write position, pad length and token budget inside one jitted
+  ``lax.while_loop`` decode program, so a wave of any step count runs from a
+  single trace; freed slots are re-prefilled and merged back with a masked
+  ``jnp.where`` (slot-level cache reset, no retrace).  One device→host sync
+  per admission wave.
+* ``decode="chunked"`` — the previous fixed-chunk driver: requests are cut
+  into ``batch``-sized chunks, each chunk prefills together and decodes to
+  the chunk's worst-case budget as one fused ``lax.scan`` (the continuous
+  scheduler's throughput baseline in ``benchmarks/run.py serve``).
+* ``decode="loop"`` — the seed per-token Python loop (one sync per decoded
+  token): the equivalence oracle.
 
-``decode="loop"`` keeps the seed per-token Python loop as the benchmark
-baseline and equivalence oracle.  Given the *same* left-padded prompt, the
-scan is token-for-token identical to the loop; bucketing pads further than
-the loop does, which — like the seed's own left-padding of ragged prompts
-inside a chunk (there is no pad attention mask) — perturbs the attended
-prefix and hence the generations for prompt lengths off the bucket
-boundary.  ``prompt_bucket=1`` disables bucketing (exact lengths, loop-
-identical outputs for every length, one prefill trace per length).  Both
-drivers count their device→host transfers in ``ServeEngine.host_syncs`` so
-tests and ``benchmarks/run.py serve`` can assert the O(1)-sync property.
+**Prefill pad mask.**  Prompt lengths are bucketed to powers of two (one
+prefill trace per bucket, not per ragged length) and left-padded into the
+bucket.  Every driver threads the per-row pad length through
+``Model.prefill``/``decode_step`` into the attention mask: padded positions
+become don't-care keys (never attended — ReducedLUT's don't-care exploitation
+applied to the sequence dim) and logical positions shift by the pad, so
+left-padding — the bucket's or the ragged chunk's — is **output-invariant**
+for attention archs.  ``decode="scan"`` with default bucketing is therefore
+token-for-token identical to the unbucketed loop oracle at *every* prompt
+length, not just bucket boundaries.  (Recurrent M/R/S units still consume
+pads through their state; only attention archs get exact invariance.)
+
+**Scheduler contract** (asserted by ``tests/test_serving.py``):
+
+* *Admission*: requests are admitted FIFO into free slots; a wave admits as
+  many queued requests as fit ``bucket(max prompt) + max budget <= max_seq``.
+  Admission happens the moment slots free — mid-queue, not at chunk
+  boundaries.  ``ServeEngine.admissions`` logs ``(request_idx, slot)`` in
+  admission order.
+* *Slot lifecycle*: free → prefilled (pad-masked, bucketed) → decoding for
+  exactly ``max_new_tokens`` tokens (budget-based completion is
+  host-predictable: no device readback is needed to know when a slot frees)
+  → free.  Slot state (KV rows, position, pad, current token) is reset by a
+  masked merge, never a retrace.
+* *Sync accounting*: each wave runs ``min(remaining budgets)`` decode steps
+  and transfers its token matrix **once** (``ServeEngine.host_syncs`` counts
+  the crossings) — O(1) syncs per admission wave, independent of the wave's
+  step count.  The loop oracle syncs every token.
 """
 
 from __future__ import annotations
@@ -44,9 +70,10 @@ Array = jax.Array
 
 
 def make_prefill_step(model: Model, *, ctx=None):
-    def prefill_step(params, tokens, caches, prefix_embeds=None):
+    def prefill_step(params, tokens, caches, prefix_embeds=None, pad_len=None):
         logits, caches = model.prefill(
-            params, tokens, caches, prefix_embeds=prefix_embeds, ctx=ctx
+            params, tokens, caches, prefix_embeds=prefix_embeds, ctx=ctx,
+            pad_len=pad_len,
         )
         return logits, caches
 
@@ -56,8 +83,10 @@ def make_prefill_step(model: Model, *, ctx=None):
 def make_serve_step(model: Model, *, ctx=None, greedy: bool = True):
     """One decode step: (params, token [B,1], caches, pos) -> (next, caches)."""
 
-    def serve_step(params, token, caches, pos):
-        logits, caches = model.decode_step(params, token, caches, pos, ctx=ctx)
+    def serve_step(params, token, caches, pos, pad_len=None):
+        logits, caches = model.decode_step(
+            params, token, caches, pos, ctx=ctx, pad_len=pad_len
+        )
         nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         return nxt, caches
 
@@ -65,25 +94,27 @@ def make_serve_step(model: Model, *, ctx=None, greedy: bool = True):
 
 
 def make_decode_scan(model: Model, *, ctx=None):
-    """Whole-decode-phase program: every step fused into one ``lax.scan``.
+    """Fixed-chunk decode program: every step fused into one ``lax.scan``.
 
-    ``(params, prefill_logits [B,1,V], caches, pos0, max_new [B], length)``
-    -> ``(tokens [B, length], caches)``.  The first token (greedy argmax of
-    the prefill logits) is computed on device too, so the host touches
-    nothing until the full token matrix is ready — one transfer per batch.
-    Caches are donated: each step's KV writes reuse the prior buffers
+    ``(params, prefill_logits [B,1,V], caches, pos0, pad [B], max_new [B],
+    length)`` -> ``(tokens [B, length], caches)``.  The first token (greedy
+    argmax of the prefill logits) is computed on device too, so the host
+    touches nothing until the full token matrix is ready — one transfer per
+    chunk.  Caches are donated: each step's KV writes reuse the prior buffers
     instead of allocating ``length`` cache copies.  Slots that exhausted
     their per-request budget keep stepping (static shapes) but their emitted
     tokens are masked to -1.
     """
 
-    @functools.partial(jax.jit, static_argnums=(5,), donate_argnums=(2,))
-    def decode_scan(params, logits, caches, pos0, max_new, length: int):
+    @functools.partial(jax.jit, static_argnums=(6,), donate_argnums=(2,))
+    def decode_scan(params, logits, caches, pos0, pad, max_new, length: int):
         tok0 = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)  # [B,1]
 
         def body(carry, _):
             token, caches, pos = carry
-            lg, caches = model.decode_step(params, token, caches, pos, ctx=ctx)
+            lg, caches = model.decode_step(
+                params, token, caches, pos, ctx=ctx, pad_len=pad
+            )
             nxt = jnp.argmax(lg[:, -1:, :], axis=-1).astype(jnp.int32)
             return (nxt, caches, pos + 1), nxt[:, 0]
 
@@ -96,6 +127,67 @@ def make_decode_scan(model: Model, *, ctx=None):
         return jnp.where(step_ix < max_new[:, None], toks, -1), caches
 
     return decode_scan
+
+
+def make_decode_wave(model: Model, *, ctx=None, out_cap: int):
+    """Continuous-batching decode program: one jitted ``lax.while_loop``.
+
+    ``(params, token [B,1], caches, pos [B], pad [B], active [B], steps)``
+    -> ``(token, caches, pos, out [B, out_cap])``.  ``steps`` is a *traced*
+    scalar, so every wave — whatever its step count — runs from this single
+    trace.  ``out[:, 0]`` is the wave-start token (the prefill argmax for
+    freshly admitted slots, already-reported for carried ones); columns
+    ``1..steps`` are the tokens generated this wave; inactive slots are
+    masked to -1.  Per-slot write positions advance only where ``active``.
+    Caches are donated across waves.
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def decode_wave(params, token, caches, pos, pad, active, steps):
+        out0 = jnp.full((token.shape[0], out_cap), -1, jnp.int32)
+        out0 = out0.at[:, 0].set(jnp.where(active, token[:, 0], -1))
+        act = active.astype(jnp.int32)
+
+        def cond(carry):
+            return carry[0] < steps
+
+        def body(carry):
+            t, token, caches, pos, out = carry
+            lg, caches = model.decode_step(
+                params, token, caches, pos, ctx=ctx, pad_len=pad
+            )
+            nxt = jnp.argmax(lg[:, -1:, :], axis=-1).astype(jnp.int32)
+            out = out.at[:, t + 1].set(jnp.where(active, nxt[:, 0], -1))
+            return (t + 1, nxt, caches, pos + act, out)
+
+        _, token, caches, pos, out = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), token, caches, pos, out0)
+        )
+        return token, caches, pos, out
+
+    return decode_wave
+
+
+def make_admit_merge():
+    """Slot-level state reset without retracing: splice freshly prefilled
+    rows into the persistent serving state behind a boolean slot mask.
+
+    Cache leaves are stacked per segment unit (``[n_units, B, ...]`` — batch
+    on axis 1); per-slot vectors (token/pos/pad) carry batch on axis 0.  One
+    trace serves every admission pattern.
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(0, 2))
+    def admit_merge(caches, new_caches, vecs, new_vecs, mask):
+        cm = lambda old, new: jnp.where(
+            mask.reshape((1, -1) + (1,) * (old.ndim - 2)), new, old
+        )
+        vm = lambda old, new: jnp.where(
+            mask.reshape((-1,) + (1,) * (old.ndim - 1)), new, old
+        )
+        return jax.tree.map(cm, caches, new_caches), jax.tree.map(vm, vecs, new_vecs)
+
+    return admit_merge
 
 
 def bucket_to(n: int, floor: int) -> int:
@@ -118,7 +210,7 @@ class Request:
 
 
 class ServeEngine:
-    """Minimal batched serving driver (static batch slots, greedy decode)."""
+    """Continuous-batching serving driver (static batch slots, greedy)."""
 
     def __init__(
         self,
@@ -131,8 +223,10 @@ class ServeEngine:
         decode: str = "scan",
         prompt_bucket: int = 8,
     ):
-        if decode not in ("scan", "loop"):
-            raise ValueError(f"decode must be 'scan' or 'loop', got {decode!r}")
+        if decode not in ("scan", "chunked", "loop"):
+            raise ValueError(
+                f"decode must be 'scan', 'chunked' or 'loop', got {decode!r}"
+            )
         self.model = model
         self.params = params
         self.batch = batch
@@ -143,33 +237,60 @@ class ServeEngine:
         self._prefill = jax.jit(make_prefill_step(model, ctx=ctx))
         self._step = jax.jit(make_serve_step(model, ctx=ctx))
         self._decode_scan = make_decode_scan(model, ctx=ctx)
-        self.host_syncs = 0             # device->host transfers performed
+        self._decode_wave = make_decode_wave(model, ctx=ctx, out_cap=max_seq)
+        self._admit_merge = make_admit_merge()
+        # ``prompt_bucket`` shapes the scan/chunked prefill traces; the loop
+        # oracle always pads to the exact chunk max (i.e. behaves as
+        # ``prompt_bucket=1`` by construction).
+        self.host_syncs = 0             # device->host transfers, CUMULATIVE
+                                        # across generate() calls (seed
+                                        # contract; callers reset to re-count)
+        self.admissions: list[tuple[int, int]] = []   # (request_idx, slot),
+                                                      # reset per generate()
+                                                      # (indices are per-call)
 
     def _fetch(self, x) -> np.ndarray:
         """The ONLY device→host crossing point — counted so the O(1)-syncs
-        property of the scan decode is assertable from outside."""
+        property of the scan/wave decode is assertable from outside."""
         self.host_syncs += 1
         return np.asarray(x)
 
+    def _validate(self, requests: list[Request]) -> None:
+        for r in requests:
+            if len(r.prompt) == 0:
+                raise ValueError(
+                    "empty prompt: with pad-masked prefill a zero-length "
+                    "prompt has no valid key position to attend"
+                )
+            self._check_fits(len(r.prompt), r.max_new_tokens)
+
     def generate(self, requests: list[Request]) -> list[list[int]]:
-        """Serve a list of equal-or-ragged prompts in fixed-size batches."""
+        """Serve a list of equal-or-ragged prompts; returns per-request
+        greedy tokens in request order."""
+        self._validate(requests)
+        if self.decode == "scan":
+            return self._generate_continuous(requests)
         out: list[list[int]] = []
         for start in range(0, len(requests), self.batch):
             chunk = requests[start : start + self.batch]
             out.extend(
-                self._generate_batch_scan(chunk)
-                if self.decode == "scan"
+                self._generate_batch_chunked(chunk)
+                if self.decode == "chunked"
                 else self._generate_batch_loop(chunk)
             )
         return out
 
-    # --- scan driver: bucketed prefill + one fused decode program ---------
+    # --- shared helpers ---------------------------------------------------
 
-    def _pad_prompts(self, chunk: list[Request], plen: int) -> np.ndarray:
+    def _pad_prompts(self, chunk: list[Request], plen: int):
+        """Left-pad ragged prompts into a [batch, plen] matrix; returns the
+        tokens and the per-row pad lengths (the prefill pad mask)."""
         toks = np.zeros((self.batch, plen), np.int32)
+        pad = np.zeros((self.batch,), np.int32)
         for i, r in enumerate(chunk):
             toks[i, plen - len(r.prompt) :] = r.prompt          # left-pad
-        return toks
+            pad[i] = plen - len(r.prompt)
+        return toks, pad
 
     def _check_fits(self, plen: int, max_new: int) -> None:
         if plen + max_new > self.max_seq:
@@ -178,10 +299,113 @@ class ServeEngine:
                 f"{self.max_seq}"
             )
 
-    def _generate_batch_scan(self, chunk: list[Request]) -> list[list[int]]:
+    def _wave_bucket(self, reqs: list[Request]) -> int:
+        """Prefill extent for a set of co-admitted requests: the prompt
+        bucket, shrunk to the exact max length when the bucket would push the
+        worst-case decode past max_seq."""
+        plen = max(len(r.prompt) for r in reqs)
+        worst = max(r.max_new_tokens for r in reqs)
+        plen_b = bucket_to(plen, self.prompt_bucket)
+        if plen_b + worst > self.max_seq:
+            plen_b = max(plen, self.max_seq - worst)
+        return plen_b
+
+    def _wave_fits(self, reqs: list[Request]) -> bool:
+        plen_b = self._wave_bucket(reqs)
+        return plen_b >= max(len(r.prompt) for r in reqs) and all(
+            plen_b + r.max_new_tokens <= self.max_seq for r in reqs
+        )
+
+    # --- continuous driver: slot scheduler + while-loop decode waves ------
+
+    def _generate_continuous(self, requests: list[Request]) -> list[list[int]]:
+        b = self.batch
+        self.admissions = []      # per-call log: request indices are local
+        outs: list[list[int]] = [[] for _ in requests]
+        queue = [i for i, r in enumerate(requests) if r.max_new_tokens > 0]
+        caches = self.model.init_cache(b, self.max_seq, dtype=jnp.float32)
+        token = jnp.zeros((b, 1), jnp.int32)
+        pos = jnp.zeros((b,), jnp.int32)
+        pad = jnp.zeros((b,), jnp.int32)
+        slot_req: list[int | None] = [None] * b   # request idx per slot
+        slot_rem = [0] * b                        # decode steps still owed
+        qi = 0
+        while qi < len(queue) or any(s is not None for s in slot_req):
+            # Admission: FIFO into free slots, as many as legally share one
+            # prefill extent (singletons always fit, so the queue drains).
+            admitted: list[int] = []
+            wave_reqs: list[Request] = []
+            for s in range(b):
+                if slot_req[s] is not None or qi >= len(queue):
+                    continue
+                cand = requests[queue[qi]]
+                if not self._wave_fits(wave_reqs + [cand]):
+                    break
+                wave_reqs.append(cand)
+                slot_req[s] = queue[qi]
+                slot_rem[s] = cand.max_new_tokens - 1
+                admitted.append(s)
+                qi += 1
+            if admitted:
+                plen_b = self._wave_bucket(wave_reqs)
+                toks = np.zeros((b, plen_b), np.int32)
+                npad = np.zeros((b,), np.int32)
+                amask = np.zeros((b,), bool)
+                for s in admitted:
+                    pr = requests[slot_req[s]].prompt
+                    toks[s, plen_b - len(pr) :] = pr
+                    npad[s] = plen_b - len(pr)
+                    amask[s] = True
+                # Prefill must see a ZERO cache, not a reused scratch:
+                # recurrent units (M/R/S) consume the incoming state as their
+                # initial state during prefill, so a previous occupant's
+                # state would leak into the new request.  (Attention rows
+                # would be safe — stale keys past the written extent are
+                # never attended.)
+                fresh = self.model.init_cache(b, self.max_seq, dtype=jnp.float32)
+                lg, fresh = self._prefill(
+                    self.params, jnp.asarray(toks), fresh,
+                    pad_len=jnp.asarray(npad),
+                )
+                tok0 = jnp.argmax(lg[:, -1:, :], axis=-1).astype(jnp.int32)
+                caches, (token, pos, pad) = self._admit_merge(
+                    caches, fresh, (token, pos, pad),
+                    (tok0, jnp.full((b,), plen_b, jnp.int32), jnp.asarray(npad)),
+                    jnp.asarray(amask),
+                )
+                self.admissions.extend((slot_req[s], s) for s in admitted)
+            active = np.array([s is not None for s in slot_req])
+            steps = min(
+                (slot_rem[s] for s in range(b) if slot_req[s] is not None),
+                default=0,
+            )
+            token, caches, pos, out_dev = self._decode_wave(
+                self.params, token, caches, pos, pad,
+                jnp.asarray(active), jnp.int32(steps),
+            )
+            # The wave's single device->host sync; steps is host-known, so
+            # only the used columns cross (the slice is outside the trace).
+            mat = self._fetch(out_dev[:, : 1 + steps])
+            for s in range(b):
+                i = slot_req[s]
+                if i is None:
+                    continue
+                lo = 0 if s in admitted else 1   # col 0 = wave-start token
+                outs[i].extend(int(t) for t in mat[s, lo : 1 + steps])
+                slot_rem[s] -= steps
+                if slot_rem[s] == 0:
+                    slot_req[s] = None           # freed: next wave re-admits
+        return outs
+
+    # --- chunked driver: bucketed prefill + one fused decode per chunk ----
+
+    def _generate_batch_chunked(self, chunk: list[Request]) -> list[list[int]]:
         b = self.batch
         plen = max(len(r.prompt) for r in chunk)
         max_new = max(r.max_new_tokens for r in chunk)
+        # Chunked decode runs the whole chunk to the worst-case budget, so
+        # the chunk's (max plen, max budget) pair must fit — a per-request
+        # check is not enough (the continuous driver needs only that).
         self._check_fits(plen, max_new)
         if max_new == 0:
             return [[] for _ in chunk]
@@ -194,17 +418,19 @@ class ServeEngine:
             length = max_new
         plen_b = min(bucket_to(plen, self.prompt_bucket), self.max_seq - length)
 
-        toks = self._pad_prompts(chunk, plen_b)
+        toks, pad = self._pad_prompts(chunk, plen_b)
         caches = self.model.init_cache(b, self.max_seq, dtype=jnp.float32)
-        logits, caches = self._prefill(self.params, jnp.asarray(toks), caches)
+        logits, caches = self._prefill(
+            self.params, jnp.asarray(toks), caches, pad_len=jnp.asarray(pad)
+        )
         mn = np.ones((b,), np.int32)
         for i, r in enumerate(chunk):
             mn[i] = r.max_new_tokens
         ys, _ = self._decode_scan(
-            self.params, logits, caches, jnp.int32(plen_b), jnp.asarray(mn),
-            length,
+            self.params, logits, caches, jnp.int32(plen_b), jnp.asarray(pad),
+            jnp.asarray(mn), length,
         )
-        mat = self._fetch(ys)            # the batch's single device->host sync
+        mat = self._fetch(ys)            # the chunk's single device->host sync
         return [
             [int(t) for t in mat[i, : chunk[i].max_new_tokens]]
             for i in range(len(chunk))
@@ -215,19 +441,24 @@ class ServeEngine:
     def _generate_batch_loop(self, chunk: list[Request]) -> list[list[int]]:
         plen = max(len(r.prompt) for r in chunk)
         self._check_fits(plen, max(r.max_new_tokens for r in chunk))
-        toks = self._pad_prompts(chunk, plen)
+        toks, pad = self._pad_prompts(chunk, plen)
+        pad_dev = jnp.asarray(pad)
         caches = self.model.init_cache(self.batch, self.max_seq, dtype=jnp.float32)
-        logits, caches = self._prefill(self.params, jnp.asarray(toks), caches)
+        logits, caches = self._prefill(
+            self.params, jnp.asarray(toks), caches, pad_len=pad_dev
+        )
         token = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
         max_new = max(r.max_new_tokens for r in chunk)
         outs: list[list[int]] = [[] for _ in chunk]
+        if max_new == 0:
+            return outs
         tok_h = self._fetch(token)                  # one sync per decoded step
         for i, r in enumerate(chunk):
             if r.max_new_tokens > 0:
                 outs[i].append(int(tok_h[i, 0]))
         for t in range(max_new - 1):
             token, caches = self._step(
-                self.params, token, caches, jnp.int32(plen + t)
+                self.params, token, caches, jnp.int32(plen + t), pad_dev
             )
             tok_h = self._fetch(token)
             for i, r in enumerate(chunk):

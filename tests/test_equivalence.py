@@ -1,0 +1,154 @@
+"""Cross-engine equivalence: ONE property-based differential suite.
+
+Consolidates the per-mode bit-exactness assertions that used to be scattered
+across ``test_prepared.py`` (prepared vs raw, one test per mode) and
+``test_engines.py`` (one test per engine): a single random sweep over
+``(bw, ba, p, F, K, B)`` asserting, for every draw,
+
+* ``apply_linear(prepared, x) == apply_linear(raw, x)`` **bit for bit** in
+  all four execution modes (``dequant``/``lut``/``stream``/``pallas``) and on
+  both grid kinds (``int``/``fp``) — the weight-stationary prepare/apply
+  contract;
+* ``lut`` and ``stream`` agree bit for bit (same integer semantics, §IV-C);
+* every engine entry point — canonical, packed, streamed (tiled and seed
+  loop), and each prepared weight-product fast path — reproduces
+  ``quantized_matmul_ref`` on the integer codes exactly.
+
+Runs under real hypothesis when installed; otherwise the deterministic
+vendored fallback in ``tests/_vendor`` draws the same parameter spaces.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import api, engine, luts
+from repro.core.prepared import prepare_linear
+
+MODES = ("dequant", "lut", "stream", "pallas")
+
+# (bw, ba, p); p=None exercises the perf-model p* auto-selection that every
+# LUT path must agree on (api.plan_p).
+CONFIGS = st.sampled_from(
+    [(1, 3, 2), (1, 3, 4), (1, 4, 3), (2, 2, 3), (4, 4, 2), (1, 1, 5),
+     (2, 3, None)]
+)
+
+
+def _quantized(bw, ba, p, mode, kind, w, bias):
+    if mode == "pallas" and kind == "fp":
+        # pallas decode takes the weight grid only; activations stay fp32 —
+        # quantize on the int grids, then swap the weight grid kind.
+        spec = api.LutLinearSpec(bw=bw, ba=ba, mode=mode, p=p)
+        q = api.quantize_linear(w, spec, bias=bias)
+        return dataclasses.replace(
+            q, spec=dataclasses.replace(q.spec, w_kind="fp")
+        )
+    spec = api.LutLinearSpec(bw=bw, ba=ba, mode=mode, p=p,
+                             w_kind=kind, a_kind=kind)
+    return api.quantize_linear(w, spec, bias=bias)
+
+
+@settings(max_examples=6, deadline=None)
+@given(cfg=CONFIGS, f=st.integers(1, 10), k=st.integers(1, 18),
+       b=st.integers(1, 5), seed=st.integers(0, 2**16))
+def test_apply_linear_prepared_bit_identical_all_modes_and_grids(
+    cfg, f, k, b, seed
+):
+    """raw-vs-prepared bit-identity x 4 modes x 2 grid kinds, plus the
+    lut == stream cross-mode identity, at one random (bw, ba, p, F, K, B)."""
+    bw, ba, p = cfg
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, f)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(f,)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, k)).astype(np.float32))
+    for kind in ("int", "fp"):
+        # the 1-bit fp value grid is degenerate ([0, 0]); fp needs >= 2 bits
+        bwk, bak = (max(bw, 2), max(ba, 2)) if kind == "fp" else (bw, ba)
+        per_mode = {}
+        for mode in MODES:
+            q = _quantized(bwk, bak, p, mode, kind, w, bias)
+            pl = prepare_linear(q, n_hint=b)
+            y_raw = np.asarray(api.apply_linear(q, x))
+            y_prep = np.asarray(api.apply_linear(pl, x))
+            assert np.array_equal(y_raw, y_prep), (mode, kind)
+            per_mode[mode] = y_raw
+        if kind == "int":
+            # §IV-C: streaming only reorders the walk of integer sums —
+            # bit-identical to the canonical-LUT path.
+            assert np.array_equal(per_mode["lut"], per_mode["stream"])
+        else:
+            # float grids accumulate in float: same sums, association-free
+            np.testing.assert_allclose(
+                per_mode["lut"], per_mode["stream"], rtol=1e-5, atol=1e-6
+            )
+
+
+@settings(max_examples=12, deadline=None)
+@given(cfg=st.sampled_from([(1, 3, 3), (1, 4, 2), (2, 2, 4), (1, 1, 6)]),
+       m=st.integers(1, 9), k=st.integers(1, 17), n=st.integers(1, 7),
+       seed=st.integers(0, 2**16))
+def test_every_engine_matches_reference(cfg, m, k, n, seed):
+    """canonical / packed / streamed (tiled + seed loop) and every prepared
+    weight-product entry point == quantized_matmul_ref, bit for bit —
+    including ragged K (partial final group pad correction)."""
+    bw, ba, p = cfg
+    pack = luts.build_lut_pack(bw, ba, p, with_packed=True)
+    rng = np.random.default_rng(seed)
+    wc = jnp.asarray(rng.integers(0, 2**bw, (m, k)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 2**ba, (k, n)).astype(np.int32))
+    ref = np.asarray(engine.quantized_matmul_ref(wc, ac, pack.wgrid, pack.agrid))
+
+    outs = {
+        "canonical": engine.canonical_lut_gemm(wc, ac, pack),
+        "packed": engine.packed_lut_gemm(wc, ac, pack),
+        "streamed": engine.streamed_lut_gemm(wc, ac, pack)[0],
+        "looped": engine.streamed_lut_gemm_looped(wc, ac, pack)[0],
+    }
+    # Prepared weight products: the four serve-time fast paths.
+    prep = engine.prepare_stream_weights(np.asarray(wc), pack)
+    wpk = jnp.asarray(prep.wpk)
+    outs["canonical/wpacked"] = engine.canonical_lut_gemm(
+        None, ac, pack, wpacked=wpk
+    )
+    outs["canonical/wcanon"] = engine.canonical_lut_gemm(
+        None, ac, pack, wcanon_table=jnp.asarray(pack.reordering)[wpk]
+    )
+    outs["streamed/prep"] = engine.streamed_lut_gemm(None, ac, pack, prep=prep)[0]
+    outs["packed/widx"] = engine.packed_lut_gemm(None, ac, pack, widx=wpk)
+    for name, out in outs.items():
+        assert np.array_equal(np.asarray(out), ref), name
+
+
+def test_prepared_stream_stats_identical_to_raw():
+    """The differential contract covers the stats side too: prepared
+    streaming reports the identical traffic counters."""
+    rng = np.random.default_rng(5)
+    pack = luts.build_lut_pack(1, 3, 3)
+    wc = jnp.asarray(rng.integers(0, 2, (6, 11)).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, 8, (11, 4)).astype(np.int32))
+    prep = engine.prepare_stream_weights(np.asarray(wc), pack)
+    _, s_raw = engine.streamed_lut_gemm(wc, ac, pack)
+    _, s_prep = engine.streamed_lut_gemm(None, ac, pack, prep=prep)
+    assert dataclasses.asdict(s_raw) == dataclasses.asdict(s_prep)
+
+
+@pytest.mark.parametrize("kind", ["int", "fp"])
+def test_float_grids_run_every_lut_engine(kind):
+    """fp value grids flow through the same engines (float accumulation)."""
+    pack = luts.build_lut_pack(2, 3, 3, w_kind=kind, a_kind=kind)
+    rng = np.random.default_rng(3)
+    m, k, n = 5, 10, 4                                  # ragged K: pad path
+    wc = rng.integers(0, 4, (m, k)).astype(np.int32)
+    ac = rng.integers(0, 8, (k, n)).astype(np.int32)
+    ref = pack.wgrid[wc] @ pack.agrid[ac]
+    y_c = engine.canonical_lut_gemm(jnp.asarray(wc), jnp.asarray(ac), pack)
+    y_s, _ = engine.streamed_lut_gemm(jnp.asarray(wc), jnp.asarray(ac), pack)
+    if kind == "fp":
+        assert y_s.dtype == jnp.float32       # float accumulation path
+    np.testing.assert_allclose(np.asarray(y_c), ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_s), ref, rtol=1e-5, atol=1e-5)

@@ -1,9 +1,11 @@
-"""Weight-stationary prepare/apply split: bit-exactness + cached products.
+"""Weight-stationary prepare/apply split: cached-product specifics.
 
-The contract: :func:`repro.core.prepare_linear` may cache anything it wants,
-but ``apply_linear(prepared, x)`` must be bit-identical to
+The core contract — ``apply_linear(prepared, x)`` bit-identical to
 ``apply_linear(raw, x)`` in every execution mode and on every grid kind —
-the prepared path removes per-call weight work, never changes numerics.
+is swept property-based in ``tests/test_equivalence.py`` (random
+``(bw, ba, p, F, K, B)`` draws).  This file keeps what that sweep does not
+cover: the wcanon table semantics, size caps, stream-stats plumbing, pytree
+behavior, and the model-tree prepare walk.
 """
 
 import dataclasses
@@ -32,22 +34,6 @@ def _q(mode, kind, bw=2, ba=4, p=3, **kw):
 def _x(b=B, k=K):
     rng = np.random.default_rng(1)
     return jnp.asarray(rng.normal(size=(b, k)).astype(np.float32))
-
-
-@pytest.mark.parametrize("kind", ["int", "fp"])
-@pytest.mark.parametrize("mode", ["dequant", "lut", "stream", "pallas"])
-def test_prepared_bit_exact_all_modes_and_grids(mode, kind):
-    if mode == "pallas" and kind == "fp":
-        # pallas decode path takes the weight grid only; activations stay fp32
-        q = _q(mode, "int")
-        q = dataclasses.replace(q, spec=dataclasses.replace(q.spec, w_kind="fp"))
-    else:
-        q = _q(mode, kind)
-    pl = prepare_linear(q)
-    x = _x()
-    y_raw = api.apply_linear(q, x)
-    y_prep = api.apply_linear(pl, x)
-    assert np.array_equal(np.asarray(y_raw), np.asarray(y_prep)), mode
 
 
 def test_prepared_bit_exact_ragged_k_and_auto_p():
@@ -162,33 +148,6 @@ def test_prepare_params_walks_models():
     yq, _, _ = model.forward(qparams, toks)
     yp, _, _ = model.forward(pparams, toks)
     np.testing.assert_allclose(np.asarray(yq), np.asarray(yp), rtol=1e-6, atol=1e-6)
-
-
-def test_engine_prepared_weight_products_bit_exact():
-    """Engine-level entry points: wpacked / wcanon_table / StreamWeights /
-    widx all reproduce the plain calls bit for bit."""
-    from repro.core import luts
-
-    pack = luts.build_lut_pack(1, 3, 3, with_packed=True)
-    rng = np.random.default_rng(3)
-    m, k, n = 8, 13, 6                                   # ragged K
-    wc = jnp.asarray(rng.integers(0, 2, (m, k)).astype(np.int32))
-    ac = jnp.asarray(rng.integers(0, 8, (k, n)).astype(np.int32))
-    ref = engine.quantized_matmul_ref(wc, ac, pack.wgrid, pack.agrid)
-    prep = engine.prepare_stream_weights(np.asarray(wc), pack)
-    wpk = jnp.asarray(prep.wpk)
-    out = engine.canonical_lut_gemm(None, ac, pack, wpacked=wpk)
-    assert np.array_equal(np.asarray(out), np.asarray(ref))
-    wtab = jnp.asarray(pack.reordering)[wpk]
-    out = engine.canonical_lut_gemm(None, ac, pack, wcanon_table=wtab)
-    assert np.array_equal(np.asarray(out), np.asarray(ref))
-    out, stats = engine.streamed_lut_gemm(None, ac, pack, prep=prep)
-    assert np.array_equal(np.asarray(out), np.asarray(ref))
-    _, stats_raw = engine.streamed_lut_gemm(wc, ac, pack)
-    assert dataclasses.asdict(stats) == dataclasses.asdict(stats_raw)
-    out = engine.packed_lut_gemm(None, ac, pack, widx=wpk)
-    want = engine.packed_lut_gemm(wc, ac, pack)
-    assert np.array_equal(np.asarray(out), np.asarray(want))
 
 
 def test_stacked_leaves_prepare_under_vmap_only():

@@ -1,4 +1,6 @@
-"""Serving: prefill+decode equals full forward; batched engine sanity."""
+"""Serving: prefill+decode equals full forward; continuous batching;
+pad-masked bucketing invariance; scheduler contract (admission order, slot
+reuse, O(1) host syncs per admission wave)."""
 
 import dataclasses
 
@@ -190,3 +192,169 @@ def test_request_has_no_dead_generated_field():
     import dataclasses as dc
 
     assert [f.name for f in dc.fields(Request)] == ["prompt", "max_new_tokens"]
+
+
+# --- pad-masked prefill: bucketing invariance ---------------------------
+
+
+def test_bucketed_scan_matches_unbucketed_loop_at_every_length():
+    """THE pad-mask property (ISSUE 4 acceptance): with default power-of-two
+    bucketing, the continuous scan driver is token-for-token identical to
+    the ``prompt_bucket=1`` loop oracle at EVERY prompt length in a ragged
+    batch — lengths off the bucket boundary included.
+
+    (The loop oracle pads to the exact chunk max by construction, i.e. it
+    IS the ``prompt_bucket=1`` reference — the knob only shapes the
+    scan/chunked prefill traces.)"""
+    cfg, (scan, loop) = _engines()            # scan: default prompt_bucket=8
+    rng = np.random.default_rng(4)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                max_new_tokens=m)
+        for n, m in [(2, 4), (3, 6), (5, 3), (7, 5), (9, 4), (11, 6), (13, 2)]
+    ]
+    assert scan.generate(reqs) == loop.generate(reqs)
+
+
+def test_padding_is_output_invariant_against_solo_requests():
+    """Stronger than scan==loop: every request served in a ragged batch (any
+    scheduler) produces the tokens it would produce served ALONE, unpadded —
+    left-padding is fully don't-care, as is batch composition."""
+    cfg, (scan, chunked) = _engines(decodes=("scan", "chunked"))
+    solo = ServeEngine(scan.model, scan.params, batch=1, max_seq=32,
+                       decode="loop", prompt_bucket=1)
+    rng = np.random.default_rng(5)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                max_new_tokens=m)
+        for n, m in [(3, 5), (6, 2), (10, 6), (5, 4), (2, 3)]
+    ]
+    want = [solo.generate([r])[0] for r in reqs]
+    assert scan.generate(reqs) == want
+    assert chunked.generate(reqs) == want
+
+
+def test_pad_mask_invariance_on_mla_arch():
+    """The pad mask also flows through the MLA (latent attention) path.
+
+    deepseek is MoE: capacity-factor routing lets pad tokens compete for
+    expert capacity (like recurrent state, a non-attention leak), so the
+    invariance claim needs the dropless config — attention itself is exact.
+    """
+    cfg = _dropless(get_config("deepseek-v2-lite-16b", smoke=True))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    scan, loop = (
+        ServeEngine(model, params, batch=2, max_seq=32, decode=d)
+        for d in ("scan", "loop")
+    )
+    rng = np.random.default_rng(6)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                max_new_tokens=3)
+        for n in (3, 5, 7)
+    ]
+    assert scan.generate(reqs) == loop.generate(reqs)
+
+
+# --- continuous in-flight batching: scheduler contract -------------------
+
+
+def test_continuous_admission_reuses_freed_slot_in_order():
+    """Requests are admitted FIFO into the slot that freed — mid-decode, not
+    at chunk boundaries; ``admissions`` logs (request_idx, slot)."""
+    cfg, (scan,) = _engines(decodes=("scan",))
+    rng = np.random.default_rng(7)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                max_new_tokens=m)
+        for m in (6, 2, 4, 2)
+    ]
+    outs = scan.generate(reqs)
+    assert [len(o) for o in outs] == [6, 2, 4, 2]
+    # r0 holds slot 0 throughout; r1 finishes first, so r2 and then r3 both
+    # reuse slot 1 while r0 is still mid-decode.
+    assert scan.admissions == [(0, 0), (1, 1), (2, 1), (3, 1)]
+    # 3 admission waves (r0+r1 | r2 | r3), one sync each
+    assert scan.host_syncs == 3
+
+
+def test_continuous_host_syncs_O1_per_admission_wave():
+    """Sync count depends on the admission-wave structure only, not on the
+    number of decode steps: scaling every budget 3x leaves it unchanged."""
+    cfg, (a, b) = _engines(decodes=("scan", "scan"))
+    rng = np.random.default_rng(8)
+
+    def reqs(scale):
+        return [
+            Request(prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                    max_new_tokens=m * scale)
+            for m in (2, 1, 3, 1)
+        ]
+
+    a.generate(reqs(1))
+    b.generate(reqs(3))
+    assert a.host_syncs == b.host_syncs > 0
+    assert a.admissions == b.admissions
+
+
+def test_continuous_mixed_zero_budget_and_singletons():
+    """max_new=0 requests are never admitted (empty output), and a batch
+    with more requests than slots drains the queue."""
+    cfg, (scan, loop) = _engines()
+    rng = np.random.default_rng(9)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                max_new_tokens=m)
+        for m in (3, 0, 1, 5, 0)
+    ]
+    outs = scan.generate(reqs)
+    assert [len(o) for o in outs] == [3, 0, 1, 5, 0]
+    assert loop.generate(reqs) == outs
+    assert all(i != 1 and i != 4 for i, _ in scan.admissions)
+
+
+# --- edge cases: bucket_to / _check_fits / empty prompts ----------------
+
+
+def test_bucket_to_edge_cases():
+    from repro.serve.serving import bucket_to
+
+    # power-of-two ladder from the floor
+    assert [bucket_to(n, 8) for n in (1, 8, 9, 16, 17)] == [8, 8, 16, 16, 32]
+    # non-power-of-two floors walk floor * 2^i
+    assert [bucket_to(n, 3) for n in (1, 3, 4, 6, 7, 13)] == [3, 3, 6, 6, 12, 24]
+    # floor <= 1 disables bucketing entirely
+    assert [bucket_to(n, 1) for n in (0, 1, 5)] == [0, 1, 5]
+    assert bucket_to(7, 0) == 7
+    # n=0 still returns the floor (a zero-wide prefill never traces)
+    assert bucket_to(0, 8) == 8
+
+
+def test_check_fits_and_empty_prompt_raise_in_every_driver():
+    for decode in ("scan", "chunked", "loop"):
+        cfg, (eng,) = _engines(decodes=(decode,))
+        oversized = [Request(prompt=np.zeros(30, np.int32), max_new_tokens=8)]
+        with pytest.raises(ValueError, match="exceeds max_seq"):
+            eng.generate(oversized)
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.generate([Request(prompt=np.zeros(0, np.int32),
+                                  max_new_tokens=2)])
+        assert eng.generate(
+            [Request(prompt=np.zeros(4, np.int32), max_new_tokens=0)]
+        ) == [[]]
+
+
+def test_chunked_rejects_infeasible_chunk_pair_continuous_serves_it():
+    """A long-prompt + long-budget pair that cannot share one chunk: the
+    chunked driver raises; the continuous scheduler admits them into
+    separate waves and serves both."""
+    cfg, (scan, chunked) = _engines(decodes=("scan", "chunked"))
+    reqs = [
+        Request(prompt=np.ones(24, np.int32), max_new_tokens=2),
+        Request(prompt=np.ones(2, np.int32), max_new_tokens=24),
+    ]
+    with pytest.raises(ValueError):
+        chunked.generate(reqs)
+    outs = scan.generate(reqs)
+    assert [len(o) for o in outs] == [2, 24]

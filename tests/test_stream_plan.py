@@ -157,7 +157,31 @@ def test_auto_tile_n_validation():
     with pytest.raises(ValueError):
         stream_plan.auto_tile_n(msr, pid, buffer_bytes=0, slice_bytes=4)
     with pytest.raises(ValueError):
+        stream_plan.auto_tile_n(msr, pid, buffer_bytes=64, slice_bytes=0)
+    with pytest.raises(ValueError):
         stream_plan.plan_stream(msr, pid, buffer_bytes=64)  # missing slice_bytes
+
+
+def test_auto_tile_n_budget_smaller_than_one_slice():
+    """A budget that cannot hold even a single slice pair bottoms out at
+    single-column tiles (the device would stream within a column) — it must
+    not raise, return 0, or loop."""
+    msr, pid = _random_ids(3, 6, 5, 5)
+    assert stream_plan.auto_tile_n(msr, pid, buffer_bytes=1, slice_bytes=64) == 1
+    # the planner still produces an exact, fully-covering schedule at tn=1
+    plan = stream_plan.plan_stream(msr, pid, buffer_bytes=1, slice_bytes=64)
+    assert plan.tile_n == 1 and len(plan.tiles) == msr.shape[1]
+    # single-column inputs short-circuit to 1 regardless of budget
+    assert stream_plan.auto_tile_n(
+        msr[:, :1], pid[:, :1], buffer_bytes=1, slice_bytes=64
+    ) == 1
+    # a budget of exactly one slice also degrades to tn=1 when any tile of
+    # width >= 2 holds two distinct pairs
+    msr2 = np.arange(12).reshape(3, 4) % 7
+    pid2 = np.zeros_like(msr2)
+    assert stream_plan.auto_tile_n(
+        msr2, pid2, buffer_bytes=8, slice_bytes=8
+    ) == 1
 
 
 def test_constant_addresses_collapse_to_one_slice():
