@@ -1,25 +1,14 @@
-"""Shared benchmark utilities: timing + CSV rows."""
+"""Shared benchmark utilities: timing + CSV rows.
+
+The timing implementation lives in :mod:`repro.timing` (library side, so
+the autotuner's micro-benchmarks use the identical methodology without a
+src -> benchmarks dependency); this module re-exports it for the harness
+sections plus the CSV emitter.
+"""
 
 from __future__ import annotations
 
-import time
-
-import jax
-
-
-def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median wall time per call in microseconds (jax arrays blocked)."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append((time.perf_counter() - t0) * 1e6)
-    times.sort()
-    return times[len(times) // 2]
+from repro.timing import time_fn, timed  # noqa: F401
 
 
 def emit(rows):

@@ -25,6 +25,9 @@ LAST_STREAM_PAYLOAD: dict | None = None
 # Populated by :func:`serve_decode_benchmark`; persisted as BENCH_serve.json.
 LAST_SERVE_PAYLOAD: dict | None = None
 
+# Populated by :func:`autotune_serve_benchmark`; persisted as BENCH_tune.json.
+LAST_TUNE_PAYLOAD: dict | None = None
+
 
 def _us(seconds: float) -> float:
     return seconds * 1e6
@@ -437,6 +440,23 @@ _SERVE_CONT_BATCH = 2
 _SERVE_CONT_N_REQS = 40
 
 
+def _run_serve_engine(engine, request_set, *, warm_iters: int = 1):
+    """Cold (compiles included) + warm (steady-state) pass over one request
+    set; shared by the serve and tune sections (timing via common.timed).
+    ``warm_iters > 1`` reports the best warm pass — the steady-state number
+    a gate can hold against scheduler noise."""
+    from benchmarks.common import timed
+
+    outs, cold = timed(engine.generate, request_set)
+    syncs = engine.host_syncs                # cumulative: capture post-cold
+    warm = float("inf")
+    for _ in range(warm_iters):
+        outs2, w = timed(engine.generate, request_set)
+        assert outs == outs2, "greedy decode must be deterministic"
+        warm = min(warm, w)
+    return outs, cold, warm, syncs
+
+
 def _serve_ragged_arrivals():
     """Deterministic (plen, max_new) draws for the arrival mix above."""
     rng = np.random.default_rng(7)
@@ -467,8 +487,8 @@ def serve_decode_benchmark():
     """
     global LAST_SERVE_PAYLOAD
     import dataclasses as _dc
-    import time
 
+    from benchmarks.common import timed
     from repro.configs import get_config
     from repro.core import LutLinearSpec
     from repro.models.model import build_model
@@ -483,9 +503,7 @@ def serve_decode_benchmark():
     params = model.init(jax.random.PRNGKey(0))
     spec = LutLinearSpec(mode="dequant", **_SERVE_QUANT)
     qparams = model.quantize(params, spec)
-    t0 = time.perf_counter()
-    pparams = model.prepare(qparams)
-    prepare_s = time.perf_counter() - t0
+    pparams, prepare_s = timed(model.prepare, qparams)
 
     rng = np.random.default_rng(0)
     reqs = [
@@ -496,16 +514,7 @@ def serve_decode_benchmark():
     total_tokens = len(reqs) * _SERVE_MAX_NEW
     n_batches = len(reqs)                       # batch=1 -> one request each
 
-    def run(engine, request_set):
-        t0 = time.perf_counter()
-        outs = engine.generate(request_set)
-        cold = time.perf_counter() - t0
-        syncs = engine.host_syncs            # cumulative: capture post-cold
-        t0 = time.perf_counter()
-        outs2 = engine.generate(request_set)
-        warm = time.perf_counter() - t0
-        assert outs == outs2, "greedy decode must be deterministic"
-        return outs, cold, warm, syncs
+    run = functools.partial(_run_serve_engine, warm_iters=3)
 
     eng_loop = ServeEngine(model, qparams, batch=1, max_seq=64, decode="loop")
     outs_loop, cold_l, warm_l, syncs_l = run(eng_loop, reqs)
@@ -588,6 +597,170 @@ def serve_decode_benchmark():
             speedup=dict(cold=cont_cold, warm=cont_warm),
         ),
         headline=dict(speedup=cold_speedup),
+    )
+    return rows
+
+
+# --- tune: capacity-budgeted autotuned serving vs a fixed LutLinearSpec ----
+
+# Same smoke decoder as the serve section, but the projections run the
+# paper-faithful LUT engine — the mode whose capacity-computation tradeoff
+# the autotuner re-solves per layer.  The fixed baseline is a hand-picked
+# whole-model spec (W1A3, p=2, lut): what a user without the planner writes.
+_TUNE_QUANT = dict(bw=1, ba=3)
+_TUNE_FIXED_P = 2
+_TUNE_BATCH = 2
+_TUNE_MAX_NEW = 16
+_TUNE_PROMPT_LENS = [3, 5, 7, 9, 11, 13, 17, 21]
+# Budget sweep, as fractions of the fixed spec's total bytes (the fig13-style
+# axis, swept over budget instead of p).  Every gated point affords the
+# fixed config itself (frac >= 1.0), so the planner — which carries the
+# fixed config in each layer's candidate set and ranks by measurement — can
+# always fall back to it: the autotuned >= fixed gate holds by construction,
+# not by micro-benchmark-to-serving transfer.  The measured optimum costs
+# well under the fixed spec (the fixed p=2 wcanon table is the expensive
+# product), so the budget axis's *spend* story lives in the probes: a
+# mid probe where the knapsack must choose under scarcity and a tight probe
+# (2% of fixed) that exercises the degradation order — both reported, not
+# gated (below 1.0x the fixed fallback no longer exists and run-to-run
+# serving noise could flip a strict comparison).
+_TUNE_BUDGET_FRACS = [1.0, 2.0, 4.0]
+_TUNE_MID_FRAC = 0.2
+_TUNE_TIGHT_FRAC = 0.02
+_TUNE_P_CAP = 6          # bounds the measured sweep (smoke-budget runtime)
+
+
+def autotune_serve_benchmark():
+    """Autotuned vs fixed-spec LUT serving across a LUT-capacity budget sweep.
+
+    For each budget the planner compiles a :class:`repro.tune.ModelPlan`
+    (micro-benchmark-corrected, shared measurement cache across budgets),
+    ``ServeEngine(plan=...)`` serves the same ragged request set, and the
+    plan's byte accounting is verified against the actual prepared pytree
+    (``repro.tune.verify_capacity``).  Plans never change numerics, so every
+    budget's generations are asserted token-identical to the fixed spec's.
+    Numbers land in :data:`LAST_TUNE_PAYLOAD` → ``BENCH_tune.json``; CI
+    gates autotuned >= fixed on warm tokens/s at every gated budget.
+    """
+    global LAST_TUNE_PAYLOAD
+    import dataclasses as _dc
+
+    import jax
+
+    from benchmarks.common import timed
+    from repro.configs import get_config
+    from repro.core import LutLinearSpec
+    from repro.models.model import build_model
+    from repro.serve.serving import Request, ServeEngine
+    from repro.tune import plan_model, verify_capacity
+    from repro.tune.plan import quantized_leaf_items
+    from repro.tune.space import table_bytes_for
+
+    cfg = _dc.replace(
+        get_config("stablelm-12b", smoke=True), name="tune-bench", **_SERVE_MODEL
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec = LutLinearSpec(mode="lut", p=_TUNE_FIXED_P, **_TUNE_QUANT)
+    qparams = model.quantize(params, spec)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, pl).astype(np.int32),
+                max_new_tokens=_TUNE_MAX_NEW)
+        for pl in _TUNE_PROMPT_LENS
+    ]
+    total_tokens = len(reqs) * _TUNE_MAX_NEW
+    tps = lambda dt: total_tokens / dt
+
+    # --- fixed-spec baseline ----------------------------------------------
+    pfixed, prepare_s = timed(model.prepare, qparams)
+    fixed_bytes = sum(
+        leaf.prepared_bytes for _, leaf in quantized_leaf_items(pfixed)
+    ) + table_bytes_for(spec.bw, spec.ba, _TUNE_FIXED_P, spec.w_kind, spec.a_kind)
+    eng_fixed = ServeEngine(model, pfixed, batch=_TUNE_BATCH, max_seq=64)
+    outs_fixed, cold_f, warm_f, _ = _run_serve_engine(
+        eng_fixed, reqs, warm_iters=3
+    )
+
+    rows = [
+        (f"tune/fixed_lut_p{_TUNE_FIXED_P}", _us(warm_f / total_tokens),
+         f"bytes={fixed_bytes};tokens_per_s={tps(warm_f):.1f};"
+         f"cold_tokens_per_s={tps(cold_f):.1f}"),
+    ]
+
+    # --- budget sweep ------------------------------------------------------
+    def tuned_point(frac: float):
+        budget = int(fixed_bytes * frac)
+        plan, plan_s = timed(lambda: plan_model(
+            qparams, lut_budget_bytes=budget, n_hint=_TUNE_BATCH,
+            p_cap=_TUNE_P_CAP,
+        ))
+        eng = ServeEngine(model, qparams, batch=_TUNE_BATCH, max_seq=64,
+                          plan=plan)
+        verify_capacity(eng.params, plan)    # byte accounting is exact
+        outs, cold, warm, _ = _run_serve_engine(eng, reqs, warm_iters=3)
+        # Plans change which engine runs, never numerics: same tokens out.
+        assert outs == outs_fixed, f"plan at budget {budget} changed tokens"
+        picks = {path: f"{lp.mode}/p{lp.p}" + ("+wcanon" if lp.wcanon else "")
+                 + ("" if lp.prepared else "/raw")
+                 for path, lp in sorted(plan.layers.items())}
+        return dict(
+            budget_bytes=budget, budget_frac=frac,
+            total_bytes=plan.total_bytes, table_bytes=plan.table_bytes,
+            over_budget=plan.meta["over_budget"],
+            plan_seconds=plan_s,
+            cold_tokens_per_s=tps(cold), warm_tokens_per_s=tps(warm),
+            speedup_vs_fixed_warm=tps(warm) / tps(warm_f),
+            layers=picks,
+        )
+
+    budget_points = []
+    for frac in _TUNE_BUDGET_FRACS:
+        pt = tuned_point(frac)
+        budget_points.append(pt)
+        rows.append(
+            (f"tune/autotuned/budget={frac:g}x", _us(1.0 / pt["warm_tokens_per_s"]),
+             f"bytes={pt['total_bytes']}/{pt['budget_bytes']};"
+             f"tokens_per_s={pt['warm_tokens_per_s']:.1f};"
+             f"vs_fixed={pt['speedup_vs_fixed_warm']:.2f}x")
+        )
+    mid = tuned_point(_TUNE_MID_FRAC)
+    rows.append(
+        (f"tune/scarcity_probe/budget={_TUNE_MID_FRAC:g}x", "",
+         f"bytes={mid['total_bytes']}/{mid['budget_bytes']};"
+         f"tokens_per_s={mid['warm_tokens_per_s']:.1f};"
+         f"vs_fixed={mid['speedup_vs_fixed_warm']:.2f}x")
+    )
+    tight = tuned_point(_TUNE_TIGHT_FRAC)
+    rows.append(
+        (f"tune/degradation_probe/budget={_TUNE_TIGHT_FRAC:g}x", "",
+         f"bytes={tight['total_bytes']}/{tight['budget_bytes']};"
+         f"tokens_per_s={tight['warm_tokens_per_s']:.1f};"
+         f"vs_fixed={tight['speedup_vs_fixed_warm']:.2f}x;"
+         f"over_budget={tight['over_budget']}")
+    )
+
+    LAST_TUNE_PAYLOAD = dict(
+        section="tune",
+        config=dict(
+            model=dict(_SERVE_MODEL), quant=dict(_TUNE_QUANT),
+            fixed_p=_TUNE_FIXED_P, batch=_TUNE_BATCH,
+            max_new=_TUNE_MAX_NEW, prompt_lens=list(_TUNE_PROMPT_LENS),
+            total_tokens=total_tokens, p_cap=_TUNE_P_CAP,
+        ),
+        fixed=dict(
+            bytes=fixed_bytes, prepare_seconds=prepare_s,
+            cold_tokens_per_s=tps(cold_f), warm_tokens_per_s=tps(warm_f),
+        ),
+        budgets=budget_points,             # gated: autotuned >= fixed (warm)
+        scarcity_probe=mid,                # reported, not gated (< fixed bytes)
+        degradation_probe=tight,           # reported, not gated
+        capacity_verified=True,
+        tokens_identical=True,
+        headline=dict(
+            speedup=max(p["speedup_vs_fixed_warm"] for p in budget_points),
+        ),
     )
     return rows
 

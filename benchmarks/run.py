@@ -22,6 +22,11 @@ Sections:
               fixed-chunk scheduler under a ragged Poisson-ish arrival mix
               (tokens/s, host-sync counts) at the fig13 default quant
               config; writes BENCH_serve.json at the repo root
+  tune        capacity-budgeted autotuned serving (repro.tune planner) vs a
+              fixed whole-model LutLinearSpec, swept over >=3 LUT-budget
+              points plus a degradation probe; verifies the plans' byte
+              accounting against the prepared pytrees and writes
+              BENCH_tune.json at the repo root
   roofline    TPU v5e roofline terms per (arch × shape) from the dry-run
               artifacts under runs/dryrun/.  Reading the artifacts needs no
               devices; *generating* them does — run the dry-run under forced
@@ -54,6 +59,7 @@ SECTIONS = {
     "fig21": paper_figs.fig21_float_support,
     "functional": paper_figs.functional_gemm_timing,
     "serve": paper_figs.serve_decode_benchmark,
+    "tune": paper_figs.autotune_serve_benchmark,
     "roofline": roofline.rows,
 }
 
@@ -61,6 +67,7 @@ SECTIONS = {
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
 STREAM_JSON = _ROOT / "BENCH_stream.json"
 SERVE_JSON = _ROOT / "BENCH_serve.json"
+TUNE_JSON = _ROOT / "BENCH_tune.json"
 
 
 def main() -> None:
@@ -85,6 +92,11 @@ def main() -> None:
             json.dumps(paper_figs.LAST_SERVE_PAYLOAD, indent=2) + "\n"
         )
         print(f"# wrote {SERVE_JSON}", file=sys.stderr)
+    if paper_figs.LAST_TUNE_PAYLOAD is not None:
+        TUNE_JSON.write_text(
+            json.dumps(paper_figs.LAST_TUNE_PAYLOAD, indent=2) + "\n"
+        )
+        print(f"# wrote {TUNE_JSON}", file=sys.stderr)
 
 
 if __name__ == "__main__":

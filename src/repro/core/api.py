@@ -162,13 +162,24 @@ def _dequant_matmul(q: QuantizedLinear, x: Array) -> Array:
     return jnp.einsum("...k,fk->...f", x, w_t)
 
 
-def plan_p(f: int, k: int, n: int, spec: LutLinearSpec) -> int:
+def plan_p(f: int, k: int, n: int, spec: LutLinearSpec, device=None) -> int:
     """The packing degree every LUT path agrees on: ``spec.p``, else the
-    Eq. 2/4 sweep's ``p*`` for this (M, K, N).  Shared by the raw, plan-only
-    and prepared paths so they cannot drift."""
-    return spec.p or perfmodel.make_plan(
-        perfmodel.PlanInputs(m=f, k=k, n=n, bw=spec.bw, ba=spec.ba)
-    ).p_star
+    Eq. 2/4 sweep's ``p*`` for this (M, K, N).
+
+    There is ONE p-selection heuristic in the codebase —
+    :func:`repro.core.perfmodel.make_plan` — and this is its single entry
+    point: the raw, plan-only and prepared apply paths, and the
+    ``repro.tune`` whole-model planner, all route through it so they cannot
+    drift.  ``device`` parameterizes the sweep's cost constants; when no
+    device model is given the fallback is the paper's profiled UPMEM system
+    (the seed behaviour, regression-locked against ``perfmodel.make_plan``
+    on the fig13 shapes by ``tests/test_perfmodel.py``)."""
+    if spec.p:
+        return spec.p
+    inp = perfmodel.PlanInputs(m=f, k=k, n=n, bw=spec.bw, ba=spec.ba)
+    if device is not None:
+        inp = dataclasses.replace(inp, device=device)
+    return perfmodel.make_plan(inp).p_star
 
 
 def quantized_lut_gemm(q, x: Array, run) -> Array:

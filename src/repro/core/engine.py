@@ -266,10 +266,22 @@ class StreamWeights:
     corr: float                   # exact scalar pad correction
 
 
+def stream_onehot_feasible(m: int, g: int, pack: LutPack) -> bool:
+    """Whether :func:`prepare_stream_weights` will build the one-hot BLAS
+    matrix for an ``[m, g*p]`` weight: the contraction is exact iff every f32
+    partial sum stays below 2^24, and huge R x G one-hots stop paying off.
+    Shared with ``repro.tune.space`` so the autotuner's capacity accounting
+    cannot drift from what prepare actually materializes."""
+    wg, ag = np.asarray(pack.wgrid), np.asarray(pack.agrid)
+    int_pack = pack.canonical.dtype.kind in "iu"
+    bound = g * pack.p * float(np.max(np.abs(wg))) * float(np.max(np.abs(ag)))
+    return int_pack and g > 0 and bound < 2.0**24 and m * g * pack.n_rows <= 32_000_000
+
+
 def prepare_stream_weights(wcodes, pack: LutPack) -> StreamWeights:
     """Pad + pack the weight codes and build the exact one-hot contraction
-    matrix (when the f32 partial sums stay below 2^24 and the matrix is not
-    absurdly large) — everything the streamed engine needs from the weights."""
+    matrix (when feasible, :func:`stream_onehot_feasible`) — everything the
+    streamed engine needs from the weights."""
     p = pack.p
     wc = np.asarray(wcodes)
     wg, ag = np.asarray(pack.wgrid), np.asarray(pack.agrid)
@@ -280,12 +292,8 @@ def prepare_stream_weights(wcodes, pack: LutPack) -> StreamWeights:
     g = wc.shape[1] // p
     wpk = packing.pack_index_np(wc.reshape(m, g, p), pack.bw).astype(np.int32)
     r = pack.n_rows
-    int_pack = pack.canonical.dtype.kind in "iu"
-    # The one-hot BLAS contraction is exact iff every partial sum stays below
-    # 2^24 (f32 integer exactness); huge R x G one-hots also stop paying off.
-    bound = g * p * float(np.max(np.abs(wg))) * float(np.max(np.abs(ag)))
     onehot = None
-    if int_pack and g > 0 and bound < 2.0**24 and m * g * r <= 32_000_000:
+    if stream_onehot_feasible(m, g, pack):
         buf = np.zeros(m * g * r, dtype=np.float32)
         buf[np.arange(m * g, dtype=np.int64) * r + wpk.ravel()] = 1.0
         onehot = buf.reshape(m, g * r)                             # [M, G*R]

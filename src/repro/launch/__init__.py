@@ -1,1 +1,1 @@
-"""Launch: production mesh, multi-pod dry-run, train/serve drivers."""
+"""Launch: production mesh, multi-pod dry-run, train/serve/tune drivers."""

@@ -49,7 +49,23 @@ def main():
                          "bucket padding output-invariant either way)")
     ap.add_argument("--profile", default="baseline", choices=["baseline", "serve"],
                     help="apply the EXPERIMENTS.md §4-validated perf profile")
+    ap.add_argument("--mode", default="dequant",
+                    # no "stream": the slice-streaming dataflow is
+                    # host-simulated and cannot run inside the jitted serve
+                    # programs (plans exclude it for the same reason)
+                    choices=["dequant", "lut", "pallas"],
+                    help="base execution mode of the quantized projections")
+    ap.add_argument("--plan", default=None, metavar="PLAN_JSON",
+                    help="serve through a repro.tune ModelPlan artifact "
+                         "(per-layer autotuned configs; fingerprint-checked)")
+    ap.add_argument("--autotune", type=float, default=None, metavar="BUDGET_MB",
+                    help="run the repro.tune planner inline under this "
+                         "LUT-capacity budget (MB) and serve the result")
     args = ap.parse_args()
+    if args.plan and args.autotune is not None:
+        ap.error("--plan and --autotune are mutually exclusive")
+    if (args.plan or args.autotune is not None) and args.dense:
+        ap.error("--plan/--autotune require a quantized model")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.profile != "baseline":
@@ -59,20 +75,44 @@ def main():
         print(f"perf profile: {args.profile}")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    plan = None
     if not args.dense:
         t0 = time.time()
-        params = model.quantize(params, LutLinearSpec(bw=args.bw, ba=args.ba, mode="dequant"))
-        print(f"quantized W{args.bw}A{args.ba} in {time.time()-t0:.1f}s")
+        params = model.quantize(
+            params, LutLinearSpec(bw=args.bw, ba=args.ba, mode=args.mode)
+        )
+        print(f"quantized W{args.bw}A{args.ba} ({args.mode}) in {time.time()-t0:.1f}s")
         nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
         print(f"packed parameter bytes: {nbytes:,}")
-        if args.prepare:
+        if args.plan:
+            from repro.tune import ModelPlan
+
+            plan = ModelPlan.load(args.plan)
+            print(f"loaded plan {args.plan}: {len(plan.layers)} layers, "
+                  f"{plan.total_bytes:,} B under a {plan.budget_bytes:,} B budget")
+        elif args.autotune is not None:
+            from repro.tune import plan_model
+
+            t0 = time.time()
+            plan = plan_model(
+                params,
+                lut_budget_bytes=int(args.autotune * 1024 * 1024),
+                n_hint=args.batch,
+            )
+            print(f"autotuned {len(plan.layers)} layers in {time.time()-t0:.1f}s: "
+                  f"{plan.total_bytes:,} B spent of "
+                  f"{plan.budget_bytes:,} B budget")
+        elif args.prepare:
             t0 = time.time()
             params = model.prepare(params)
             print(f"prepared weight-stationary serve products in "
                   f"{time.time()-t0:.1f}s")
 
+    # ``plan`` routes through ServeEngine's autotuned path (spec rewrite +
+    # prepare happen inside, fingerprint-checked).
     eng = ServeEngine(model, params, batch=args.batch, max_seq=args.max_seq,
-                      decode=args.decode, prompt_bucket=args.prompt_bucket)
+                      decode=args.decode, prompt_bucket=args.prompt_bucket,
+                      plan=plan)
     rng = np.random.default_rng(0)
     reqs = [
         Request(

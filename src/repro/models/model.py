@@ -99,7 +99,31 @@ def quantize_model(params, cfg: ModelConfig, spec: LutLinearSpec):
     return walk(params)
 
 
-def prepare_params(params, **kw):
+def _prepare_leaf(x: QuantizedLinear, **kw):
+    """Freeze ONE quantized leaf (stacked-aware): unstacked leaves prepare
+    directly; stacked (scanned / MoE-expert) leaves prepare under ``vmap``
+    with host-side products skipped and the ``wcanon`` entry cap divided
+    over the stack."""
+    n_lead = x.codes.ndim - 2
+    if n_lead == 0:
+        return prepare_linear(x, **kw)
+    # The per-layer wcanon capacity cap must cover the whole stack, not
+    # each vmap slice individually.
+    from repro.core.prepared import WCANON_MAX_ENTRIES
+
+    stack = int(np.prod(x.codes.shape[:n_lead]))
+    kw_s = dict(kw)
+    kw_s.setdefault(
+        "wcanon_max_entries", max(WCANON_MAX_ENTRIES // max(stack, 1), 1)
+    )
+    kw_s["host_products"] = False    # tracers cannot leave the device
+    fn = lambda q: prepare_linear(q, **kw_s)
+    for _ in range(n_lead):
+        fn = jax.vmap(fn)
+    return fn(x)
+
+
+def prepare_params(params, plan=None, **kw):
     """Freeze every :class:`QuantizedLinear` leaf into its weight-stationary
     :class:`repro.core.PreparedLinear` form.
 
@@ -111,28 +135,19 @@ def prepare_params(params, **kw):
     Host-side products (the streamed engine's one-hot) only materialize on
     unstacked leaves; ``kw`` forwards to :func:`repro.core.prepare_linear`
     (``n_hint`` etc.).
+
+    ``plan`` — a :class:`repro.tune.ModelPlan` — switches to the autotuned
+    path: each leaf's spec is rewritten to its compiled per-layer config
+    (mode/p/tile/wcanon, or left raw when the plan degraded it) before
+    preparing; the plan's shape fingerprint is verified first.
     """
+    if plan is not None:
+        from repro.tune.planner import apply_plan
+
+        return apply_plan(params, plan, **kw)
 
     def f(x):
-        if not isinstance(x, QuantizedLinear):
-            return x
-        n_lead = x.codes.ndim - 2
-        if n_lead == 0:
-            return prepare_linear(x, **kw)
-        # The per-layer wcanon capacity cap must cover the whole stack, not
-        # each vmap slice individually.
-        from repro.core.prepared import WCANON_MAX_ENTRIES
-
-        stack = int(np.prod(x.codes.shape[:n_lead]))
-        kw_s = dict(kw)
-        kw_s.setdefault(
-            "wcanon_max_entries", max(WCANON_MAX_ENTRIES // max(stack, 1), 1)
-        )
-        kw_s["host_products"] = False    # tracers cannot leave the device
-        fn = lambda q: prepare_linear(q, **kw_s)
-        for _ in range(n_lead):
-            fn = jax.vmap(fn)
-        return fn(x)
+        return _prepare_leaf(x, **kw) if isinstance(x, QuantizedLinear) else x
 
     return jax.tree.map(f, params, is_leaf=lambda x: isinstance(x, QuantizedLinear))
 
@@ -202,9 +217,11 @@ class Model:
     def quantize(self, params, spec: LutLinearSpec):
         return quantize_model(params, self.cfg, spec)
 
-    def prepare(self, params, **kw):
-        """Weight-stationary serve form: cache all per-call weight products."""
-        return prepare_params(params, **kw)
+    def prepare(self, params, plan=None, **kw):
+        """Weight-stationary serve form: cache all per-call weight products.
+        ``plan`` applies a :class:`repro.tune.ModelPlan` (autotuned per-layer
+        configs) instead of preparing every leaf at its current spec."""
+        return prepare_params(params, plan=plan, **kw)
 
 
 def build_model(cfg: ModelConfig) -> Model:

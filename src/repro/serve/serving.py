@@ -222,12 +222,20 @@ class ServeEngine:
         ctx=None,
         decode: str = "scan",
         prompt_bucket: int = 8,
+        plan=None,
     ):
         if decode not in ("scan", "chunked", "loop"):
             raise ValueError(
                 f"decode must be 'scan', 'chunked' or 'loop', got {decode!r}"
             )
         self.model = model
+        if plan is not None:
+            # Autotuned serving: apply the repro.tune ModelPlan (per-layer
+            # spec rewrite + weight-stationary prepare; fingerprint-checked).
+            # ``params`` must be the raw quantized tree — a prepared tree is
+            # already frozen to one config and apply_plan refuses it.
+            params = model.prepare(params, plan=plan, n_hint=batch)
+        self.plan = plan
         self.params = params
         self.batch = batch
         self.max_seq = max_seq

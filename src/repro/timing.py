@@ -1,0 +1,41 @@
+"""The ONE timing methodology shared by benchmarks and the autotuner.
+
+``benchmarks/common.py`` re-exports these helpers for the harness sections
+and :mod:`repro.tune.measure` imports them directly, so the functional,
+serve and tune benchmarks and the planner's micro-measurements are
+comparable by construction: monotonic clock (``time.perf_counter``),
+explicit warmup calls (compiles land there), JAX outputs blocked inside the
+timed region, median-of-k against scheduler noise.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (jax arrays blocked)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def timed(fn, *args, **kwargs):
+    """One monotonic-clock timing of ``fn(*args, **kwargs)``: returns
+    ``(result, seconds)`` with any JAX outputs blocked.  For one-shot
+    measurements (cold serve passes, prepare steps) where ``time_fn``'s
+    warmup would hide exactly the cost being measured."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0

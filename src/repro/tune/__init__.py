@@ -1,0 +1,25 @@
+"""repro.tune: capacity-budgeted autotuner compiling whole-model LUT plans.
+
+The paper's capacity-computation tradeoff (spend LUT bytes to buy lookups,
+Eq. 2-6) restated at model scale: an offline planner allocates one global
+LUT-capacity budget across every quantized layer instead of hand-picking a
+static ``LutLinearSpec`` per layer.
+
+* :mod:`repro.tune.plan`    — versioned, JSON-serializable LayerPlan/ModelPlan
+                              keyed by a parameter-tree shape fingerprint
+* :mod:`repro.tune.space`   — per-layer candidate enumeration with exact
+                              capacity accounting
+* :mod:`repro.tune.measure` — micro-benchmark harness correcting the analytic
+                              estimates (cached, median-of-k)
+* :mod:`repro.tune.planner` — greedy marginal-speedup-per-byte knapsack under
+                              a global budget + plan apply/verify
+
+Entry points: ``plan_model`` -> ``ModelPlan`` -> ``Model.prepare(params,
+plan=...)`` / ``ServeEngine(..., plan=...)``; CLI ``python -m
+repro.launch.tune``; benchmark ``python -m benchmarks.run tune``.
+"""
+
+from repro.tune.measure import Measurer  # noqa: F401
+from repro.tune.plan import LayerPlan, ModelPlan, param_fingerprint  # noqa: F401
+from repro.tune.planner import apply_plan, plan_model, verify_capacity  # noqa: F401
+from repro.tune.space import Candidate, layer_candidates  # noqa: F401

@@ -1,0 +1,89 @@
+"""Micro-benchmark harness: correct analytic estimates with measured time.
+
+The analytic candidate estimates (:mod:`repro.tune.space`) price candidates
+with the paper's UPMEM cycle model — the right currency for the PIM device,
+but not for the host/TPU that actually executes this reproduction.  The
+planner therefore *corrects* the analytic numbers by timing each candidate's
+``apply_linear`` directly: warmup calls (compile lands there), then
+median-of-k on a monotonic clock, through the one shared timing helper
+(:mod:`repro.timing`, re-exported by ``benchmarks/common.py``) so the tune,
+serve and functional benchmarks cannot drift apart in methodology.
+
+Measurements are cached process-wide by the candidate's full identity
+``(f, k, n, bw, ba, p, mode, tile_n, wcanon, prepared, kinds)`` — a planner
+sweep over many budgets (``benchmarks.run tune``) measures each distinct
+config once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core import api
+from repro.core.prepared import WCANON_MAX_ENTRIES, prepare_linear
+from repro.timing import time_fn
+from repro.tune.space import Candidate
+
+
+def measure_key(f: int, k: int, n: int, spec: api.LutLinearSpec, cand: Candidate):
+    return (
+        f, k, n, spec.bw, spec.ba, cand.p, cand.mode, cand.tile_n,
+        cand.buffer_bytes, cand.wcanon, cand.prepared, spec.w_kind, spec.a_kind,
+    )
+
+
+class Measurer:
+    """Timed ``apply_linear`` per candidate, cached by candidate identity."""
+
+    def __init__(self, *, iters: int = 3, warmup: int = 1,
+                 cache: Optional[dict] = None):
+        self.iters = iters
+        self.warmup = warmup
+        self.cache = _GLOBAL_CACHE if cache is None else cache
+        self.hits = 0
+        self.misses = 0
+
+    def measure(self, q, x, cand: Candidate) -> float:
+        """Median wall microseconds of one ``apply_linear`` call through the
+        candidate's config, on the concrete raw layer ``q`` and activation
+        sample ``x`` (``[n, K]``).  Servable candidates are timed jitted —
+        the form the serve engine runs them in; the stream dataflow is
+        host-simulated and timed eagerly."""
+        key = measure_key(q.f, q.k, x.shape[0], q.spec, cand)
+        if key in self.cache:
+            self.hits += 1
+            return self.cache[key]
+        self.misses += 1
+        qq = dataclasses.replace(q, spec=cand.spec_for(q.spec))
+        layer = qq
+        if cand.prepared:
+            layer = prepare_linear(
+                qq, n_hint=x.shape[0],
+                wcanon_max_entries=WCANON_MAX_ENTRIES if cand.wcanon else 0,
+            )
+        if cand.servable:
+            fn = jax.jit(lambda xx: api.apply_linear(layer, xx))
+        else:
+            fn = lambda xx: api.apply_linear(layer, xx)
+        us = time_fn(fn, x, iters=self.iters, warmup=self.warmup)
+        self.cache[key] = us
+        return us
+
+
+_GLOBAL_CACHE: dict = {}
+
+
+def clear_cache() -> None:
+    _GLOBAL_CACHE.clear()
+
+
+def sample_activations(k: int, n: int, seed: int = 0) -> jax.Array:
+    """Deterministic activation sample for measurement/planning."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))

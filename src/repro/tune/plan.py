@@ -1,0 +1,216 @@
+"""Versioned, JSON-serializable whole-model execution plans.
+
+A :class:`ModelPlan` is the autotuner's compiled artifact: one
+:class:`LayerPlan` per quantized leaf of a model's parameter tree, keyed by
+the leaf's tree path, plus the capacity accounting that justifies it.  The
+artifact contract (see ROADMAP "Autotuning"):
+
+* **Versioned** — ``version`` is bumped whenever the schema or the meaning
+  of a field changes; :func:`ModelPlan.from_json` refuses newer versions.
+* **Fingerprinted** — ``fingerprint`` hashes the *plan-invariant* identity
+  of every quantized leaf: tree path, packed-code shape, logical K, the
+  quantization bitwidths/grid kinds and the :func:`numerics_family` of the
+  base mode (a plan input: it selects the candidate space).  It
+  deliberately excludes ``p``/``tile_n``/``wcanon`` and the mode *within* a
+  family — those are plan *outputs*; a plan stays valid across
+  re-quantization at the same config but is invalidated the moment shapes,
+  bitwidths or the numerics family change
+  (:func:`repro.tune.planner.apply_plan` checks it).
+* **Budget semantics** — ``budget_bytes`` is the global LUT-capacity budget
+  the plan was compiled under; ``total_bytes`` is what it actually spends:
+  the sum of every layer's prepared-product bytes
+  (:attr:`repro.core.prepared.PreparedLinear.prepared_bytes`, exact) plus
+  each *distinct* shared LUT pack's table bytes counted once
+  (``table_bytes`` — canonical + reordering tables are rebuilt per host and
+  shared by every layer at the same ``(bw, ba, p, kinds)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Optional
+
+PLAN_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One quantized leaf's compiled execution config.
+
+    ``capacity_bytes`` is the exact byte size of the prepared products this
+    config materializes (0 when ``prepared`` is False — the degradation
+    floor serves the raw layer); ``est_us``/``measured_us`` record the
+    analytic estimate and the micro-benchmark correction the planner ranked
+    it by.  Within a numerics family (int-grid ``lut``/``stream``, any
+    ``p``/``wcanon``/``tile_n``; ``dequant`` raw-or-prepared) every choice
+    here is bit-identical — a plan changes *which* engine runs, never the
+    numbers (``tests/test_equivalence.py``).
+    """
+
+    mode: str
+    p: int
+    tile_n: Optional[int] = None
+    buffer_bytes: Optional[int] = None
+    wcanon: bool = False          # lut mode: materialize the weight-static
+                                  # [F, G, p!] reordering table
+    prepared: bool = True         # False -> serve the raw QuantizedLinear
+    capacity_bytes: int = 0       # exact prepared-product bytes (x stack)
+    table_bytes: int = 0          # shared LUT pack bytes (deduped in totals)
+    est_us: float = 0.0           # analytic estimate (pim_cost / perfmodel)
+    measured_us: Optional[float] = None   # micro-benchmark correction
+    stack: int = 1                # leading stacked units (scan layers x MoE)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LayerPlan":
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class ModelPlan:
+    """The whole-model execution plan: ``layers[path] -> LayerPlan``."""
+
+    fingerprint: str
+    budget_bytes: int
+    layers: dict[str, LayerPlan]
+    total_bytes: int = 0          # sum(capacity) + deduped shared tables
+    table_bytes: int = 0          # deduped shared LUT table bytes alone
+    version: int = PLAN_VERSION
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    # --- (de)serialization -------------------------------------------------
+
+    def to_json(self, indent: int | None = 2) -> str:
+        d = dict(
+            version=self.version,
+            fingerprint=self.fingerprint,
+            budget_bytes=self.budget_bytes,
+            total_bytes=self.total_bytes,
+            table_bytes=self.table_bytes,
+            layers={k: v.to_dict() for k, v in sorted(self.layers.items())},
+            meta=self.meta,
+        )
+        return json.dumps(d, indent=indent)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ModelPlan":
+        d = json.loads(s)
+        version = d.get("version", 0)
+        if version > PLAN_VERSION:
+            raise ValueError(
+                f"plan version {version} is newer than this build's "
+                f"{PLAN_VERSION}; re-run the autotuner"
+            )
+        return cls(
+            fingerprint=d["fingerprint"],
+            budget_bytes=d["budget_bytes"],
+            layers={k: LayerPlan.from_dict(v) for k, v in d["layers"].items()},
+            total_bytes=d.get("total_bytes", 0),
+            table_bytes=d.get("table_bytes", 0),
+            version=version,
+            meta=d.get("meta", {}),
+        )
+
+    def save(self, path) -> None:
+        pathlib.Path(path).write_text(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path) -> "ModelPlan":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+
+# ---------------------------------------------------------------------------
+# Parameter-tree walking + shape fingerprint
+# ---------------------------------------------------------------------------
+
+
+def _is_quantized_leaf(x) -> bool:
+    from repro.core import PreparedLinear, QuantizedLinear
+
+    return isinstance(x, (QuantizedLinear, PreparedLinear))
+
+
+def quantized_leaf_items(params) -> list[tuple[str, object]]:
+    """``(path, leaf)`` for every (Prepared)QuantizedLinear leaf, in a stable
+    depth-first order.  Paths join dict keys / list indices with ``/`` —
+    the key space ``ModelPlan.layers`` is indexed by."""
+    out: list[tuple[str, object]] = []
+
+    def walk(node, path: str):
+        if _is_quantized_leaf(node):
+            out.append((path, node))
+            return
+        if isinstance(node, dict):
+            for k in node:
+                walk(node[k], f"{path}/{k}" if path else str(k))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, f"{path}/{i}" if path else str(i))
+
+    walk(params, "")
+    return out
+
+
+def map_quantized_leaves(params, fn):
+    """Rebuild the tree with ``fn(path, leaf)`` applied to every quantized
+    leaf (the path-aware sibling of ``jax.tree.map`` the plan apply needs)."""
+
+    def walk(node, path: str):
+        if _is_quantized_leaf(node):
+            return fn(path, node)
+        if isinstance(node, dict):
+            return {
+                k: walk(v, f"{path}/{k}" if path else str(k))
+                for k, v in node.items()
+            }
+        if isinstance(node, list):
+            return [walk(v, f"{path}/{i}" if path else str(i))
+                    for i, v in enumerate(node)]
+        if isinstance(node, tuple):
+            return tuple(walk(v, f"{path}/{i}" if path else str(i))
+                         for i, v in enumerate(node))
+        return node
+
+    return walk(params, "")
+
+
+def numerics_family(spec) -> str:
+    """The bit-exactness equivalence class a spec belongs to: every config
+    inside one family produces identical outputs (so plans may move freely
+    within it), and no config outside it does.  Int-grid ``lut``/``stream``
+    share integer semantics at any p; ``dequant`` and ``pallas`` are float
+    matmuls with their own accumulation orders; float-grid LUT modes are
+    association-sensitive and each keep their own mode."""
+    if spec.mode in ("lut", "stream"):
+        if spec.w_kind == "int" and spec.a_kind == "int":
+            return "int-lut"
+        return f"fp-{spec.mode}"
+    return spec.mode
+
+
+def param_fingerprint(params) -> str:
+    """Shape fingerprint of a parameter tree's quantized leaves.
+
+    Hashes ``(path, codes.shape, k, bw, ba, w_kind, a_kind, family)`` per
+    leaf — everything a plan's validity depends on and nothing it decides.
+    ``p``/``tile_n``/``wcanon`` are plan outputs and excluded (planning and
+    re-planning the same weights at different packing configs share one
+    fingerprint); the *numerics family* of the base mode is a plan INPUT —
+    it selects the candidate space — so a plan compiled on a ``lut`` tree
+    refuses to apply to a ``dequant`` tree of the same shapes (applying it
+    would change outputs, breaking the plans-never-change-numerics
+    contract)."""
+    h = hashlib.sha256()
+    for path, leaf in quantized_leaf_items(params):
+        spec = leaf.spec
+        h.update(
+            repr((path, tuple(leaf.codes.shape), leaf.k,
+                  spec.bw, spec.ba, spec.w_kind, spec.a_kind,
+                  numerics_family(spec))).encode()
+        )
+    return h.hexdigest()[:32]

@@ -137,6 +137,37 @@ def test_prepared_stream_stats_identical_to_raw():
     assert dataclasses.asdict(s_raw) == dataclasses.asdict(s_prep)
 
 
+@settings(max_examples=6, deadline=None)
+@given(cfg=st.sampled_from([(1, 3), (1, 4), (2, 2), (4, 4)]),
+       f=st.integers(2, 10), k=st.integers(2, 18), b=st.integers(1, 4),
+       budget_kb=st.sampled_from([0, 8, 64, 4096]), seed=st.integers(0, 2**16))
+def test_autotuned_plans_never_change_numerics(cfg, f, k, b, budget_kb, seed):
+    """The repro.tune acceptance contract: whatever budget a plan is
+    compiled under — floor degradation through loose — applying it to a
+    layer is bit-identical to the unplanned ``apply_linear``.  Plans change
+    *which* engine runs (mode/p/wcanon/prepared), never numerics."""
+    from repro.tune import planner
+    from repro.tune.plan import quantized_leaf_items
+
+    bw, ba = cfg
+    rng = np.random.default_rng(seed)
+    w1 = jnp.asarray(rng.normal(size=(k, f)).astype(np.float32))
+    w2 = jnp.asarray(rng.normal(size=(f, k)).astype(np.float32))
+    spec = api.LutLinearSpec(bw=bw, ba=ba, mode="lut")
+    tree = {"a": api.quantize_linear(w1, spec),
+            "b": api.quantize_linear(w2, spec)}
+    x = {"a": jnp.asarray(rng.normal(size=(b, k)).astype(np.float32)),
+         "b": jnp.asarray(rng.normal(size=(b, f)).astype(np.float32))}
+    mp = planner.plan_model(tree, lut_budget_bytes=budget_kb * 1024,
+                            n_hint=b, measure=False, p_cap=4)
+    applied = planner.apply_plan(tree, mp)
+    planner.verify_capacity(applied, mp)
+    for path, leaf in quantized_leaf_items(applied):
+        y_plan = np.asarray(api.apply_linear(leaf, x[path]))
+        y_raw = np.asarray(api.apply_linear(tree[path], x[path]))
+        assert np.array_equal(y_plan, y_raw), (path, mp.layers[path])
+
+
 @pytest.mark.parametrize("kind", ["int", "fp"])
 def test_float_grids_run_every_lut_engine(kind):
     """fp value grids flow through the same engines (float accumulation)."""

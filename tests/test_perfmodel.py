@@ -122,6 +122,32 @@ def test_eq2_streaming_term_matches_simulated_traffic():
     assert stats.lookups == m * g * n
 
 
+def test_plan_p_defers_to_make_plan_on_fig13_shapes():
+    """Single source of truth for p-selection (the unified heuristic):
+    ``api.plan_p`` must agree with ``perfmodel.make_plan`` — with and
+    without an explicit device model — on the fig13 shapes at every paper
+    precision, and with the bank-tiled ``pim_cost.localut_plan`` on the
+    per-bank tile it evaluates."""
+    from repro.core import api
+
+    shapes = [(3072, 768, 128), (192, 768, 128), (768, 768, 128)]
+    for bw, ba in [(1, 3), (1, 4), (2, 2), (4, 4)]:
+        lspec = api.LutLinearSpec(bw=bw, ba=ba, p=None, mode="lut")
+        for m, k, n in shapes:
+            want = perfmodel.make_plan(
+                perfmodel.PlanInputs(m=m, k=k, n=n, bw=bw, ba=ba)
+            ).p_star
+            assert api.plan_p(m, k, n, lspec) == want
+            assert api.plan_p(m, k, n, lspec, device=hw.UPMEM) == want
+            # bank-tiled agreement: plan_p on the tile == localut_plan's p*
+            t = pim_cost.bank_tile(pim_cost.GemmShape(m, k, n), hw.UPMEM)
+            assert api.plan_p(t.m, t.k, t.n, lspec) == pim_cost.localut_plan(
+                pim_cost.GemmShape(m, k, n), bw, ba
+            ).p_star
+        # an explicit spec.p always wins over the sweep
+        assert api.plan_p(64, 64, 8, api.LutLinearSpec(bw=bw, ba=ba, p=3)) == 3
+
+
 def test_plan_time_consistent_with_simulated_engine():
     """The auto-selected plan's predicted time == Eq.2/Eq.4 with the same
     slice/lookup counts the functional engine actually performs."""

@@ -1,0 +1,126 @@
+"""UPMEM cycle cost model (repro.core.pim_cost): structural invariants.
+
+Complements ``test_perfmodel.py``'s paper-number checks with the properties
+the autotuner leans on: the packed-LUT designs get monotonically faster as
+the buffer budget admits a larger p, the auto-selected plan never exceeds
+the device capacity limits, and Eq. 6's break-even M agrees with what
+``make_plan``'s exhaustive Eq. 2/4 sweep actually picks.
+"""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro import hw
+from repro.core import luts, perfmodel, pim_cost
+from repro.core.pim_cost import GemmShape
+
+_SHAPES = [GemmShape(128, 128, 32), GemmShape(768, 768, 128),
+           GemmShape(3072, 768, 128)]
+_PRECS = [(1, 3), (1, 4), (2, 2), (4, 4)]
+
+
+def _dev_with_buffer(buffer_capacity: int) -> hw.PimDevice:
+    return dataclasses.replace(hw.UPMEM, buffer_capacity=buffer_capacity)
+
+
+@pytest.mark.parametrize("fn", [pim_cost.op_lut_time, pim_cost.op_lc_time])
+@pytest.mark.parametrize("bw,ba", _PRECS)
+def test_op_designs_monotone_in_buffer_admitted_p(fn, bw, ba):
+    """op/op_lc pick their p from the buffer budget: growing the buffer can
+    only raise p, and a larger packing degree never costs more time."""
+    s = GemmShape(768, 768, 128)
+    prev_t, prev_p = None, 0
+    for buf in (8 << 10, 32 << 10, 64 << 10, 256 << 10, 1 << 20):
+        dev = _dev_with_buffer(buf)
+        max_p = (luts.max_p_packed if fn is pim_cost.op_lut_time
+                 else luts.max_p_canonical)(bw, ba, dev.buffer_lut_budget)
+        t = fn(s, bw, ba, dev)
+        assert max_p >= prev_p
+        if prev_t is not None:
+            assert t <= prev_t * (1 + 1e-12)
+        prev_t, prev_p = t, max_p
+
+
+def test_localut_time_at_p_monotone_in_buffer_resident_region():
+    """Eq. 4 region (p <= p_local): time strictly decreases in p — the pure
+    capacity-buys-computation axis."""
+    for bw, ba in _PRECS:
+        p_local, _ = perfmodel.capacity_limits(bw, ba, hw.UPMEM)
+        times = [
+            pim_cost.localut_time_at_p(GemmShape(768, 768, 128), bw, ba, p)
+            for p in range(1, p_local + 1)
+        ]
+        assert all(a > b for a, b in zip(times, times[1:]))
+
+
+@pytest.mark.parametrize("bw,ba", _PRECS)
+@pytest.mark.parametrize("s", _SHAPES)
+def test_localut_plan_never_exceeds_capacity_limits(s, bw, ba):
+    plan = pim_cost.localut_plan(s, bw, ba)
+    p_local, p_dram = perfmodel.capacity_limits(bw, ba, hw.UPMEM)
+    assert 1 <= plan.p_star <= p_dram
+    assert plan.lut_bytes <= hw.UPMEM.bank_lut_budget
+    if not plan.use_streaming:
+        # Buffer-resident designs must fit the local buffer.
+        assert plan.p_star <= p_local
+        assert (
+            luts.canonical_lut_bytes(
+                bw, ba, plan.p_star,
+                luts.auto_bo(
+                    bw, ba, plan.p_star,
+                    perfmodel.QuantSpec(bw).grid(),
+                    perfmodel.QuantSpec(ba).grid(),
+                ),
+            )
+            + luts.reordering_lut_bytes(bw, plan.p_star)
+            <= hw.UPMEM.buffer_lut_budget
+        )
+    else:
+        assert plan.p_star > p_local
+
+
+@pytest.mark.parametrize("bw,ba", _PRECS)
+@pytest.mark.parametrize("s", _SHAPES)
+def test_eq6_break_even_consistent_with_make_plan(s, bw, ba):
+    """Eq. 6 algebra: for p* > p_local, streaming at p* beats the
+    buffer-resident design exactly when the (bank-tiled) M exceeds the
+    break-even — and that is the comparison make_plan's sweep resolves."""
+    dev = hw.UPMEM
+    t = pim_cost.bank_tile(s, dev)
+    plan = pim_cost.localut_plan(s, bw, ba)
+    p_local = plan.p_local
+    if plan.use_streaming:
+        be = perfmodel.eq6_break_even_m(plan.p_star, p_local, bw, dev)
+        assert be is not None and t.m > be
+        assert plan.t_predicted < plan.t_local
+    # The iff, probed on both sides of the break-even for a synthetic p*:
+    p_star = p_local + 1
+    be = perfmodel.eq6_break_even_m(p_star, p_local, bw, dev)
+    for m, expect_stream_wins in [(int(be * 0.5) + 1, False),
+                                  (int(be * 2) + 1, True)]:
+        stream_t = perfmodel.eq2_time(m, t.k, t.n, p_star, bw, dev)
+        local_t = perfmodel.eq4_time(m, t.k, t.n, p_local, dev)
+        assert (stream_t < local_t) == expect_stream_wins, (m, be)
+
+
+def test_eq6_none_when_no_streaming_gain():
+    assert perfmodel.eq6_break_even_m(3, 3, 1, hw.UPMEM) is None
+    assert perfmodel.eq6_break_even_m(2, 3, 1, hw.UPMEM) is None
+
+
+def test_bank_tile_covers_workload():
+    """The bank split never loses work: tiles x banks cover the GEMM."""
+    for s in _SHAPES:
+        t = pim_cost.bank_tile(s, hw.UPMEM)
+        nb_n = min(1 << max(s.n.bit_length() - 1, 0), hw.UPMEM.n_banks)
+        nb_m = max(hw.UPMEM.n_banks // nb_n, 1)
+        assert t.m * nb_m >= s.m and t.n * nb_n >= s.n and t.k == s.k
+
+
+def test_methods_registry_complete_and_positive():
+    s = GemmShape(256, 256, 64)
+    for name, fn in pim_cost.METHODS.items():
+        t = fn(s, 2, 2)
+        assert t > 0, name
