@@ -540,6 +540,65 @@ def serve_decode_benchmark():
     # schedulers must emit identical generations for every request.
     assert outs_co == outs_ch, "continuous vs chunked token mismatch"
 
+    # --- live operations: hot-swap, kill+replay, prepared cold start ------
+    # (dequant numerics are batch-composition invariant, so all three legs
+    # must be token-identical to the undisturbed continuous run above.)
+    import tempfile
+    import time as _time
+
+    from repro.ckpt import checkpoint as _ckpt
+    from repro.ft import supervisor as _sup
+    from repro.serve.ops import LiveServer, SwapController
+
+    # Hot-swap: background re-prepare of the same weights, flipped at a wave
+    # boundary mid-stream.  stage_seconds overlaps serving; flip_wait is the
+    # only serving-visible latency (request -> wave-boundary install).
+    eng_swap = ServeEngine(model, pparams, batch=_SERVE_CONT_BATCH,
+                           max_seq=64, decode="scan")
+    ctl = SwapController(eng_swap)
+    staged = ctl.stage(qparams=qparams)
+    swap_t: dict = {}
+
+    def _on_wave(wave, admitted, emitted):
+        if wave == 1 and "requested" not in swap_t:
+            tree = staged.wait()
+            swap_t["requested"] = _time.perf_counter()
+            eng_swap.request_swap(
+                tree,
+                on_applied=lambda: swap_t.__setitem__(
+                    "applied", _time.perf_counter()),
+            )
+
+    eng_swap.on_wave = _on_wave
+    outs_swap, _ = timed(eng_swap.generate, creqs)
+    assert eng_swap.swaps == 1 and "applied" in swap_t
+    swap_identical = outs_swap == outs_co
+    dropped = sum(
+        1 for o, r in zip(outs_swap, creqs) if len(o) != r.max_new_tokens
+    )
+    flip_wait_s = swap_t["applied"] - swap_t["requested"]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # Kill+replay: inject a crash mid-wave, rebuild the engine, replay
+        # in-flight slots from the durable log.
+        server = LiveServer(
+            lambda: ServeEngine(model, pparams, batch=_SERVE_CONT_BATCH,
+                                max_seq=64, decode="scan"),
+            log_path=f"{tmp}/serve.jsonl",
+            injector=_sup.FailureInjector(fail_at_waves=(2,)),
+        )
+        outs_replay, replay_s = timed(server.serve, creqs)
+        replay_identical = outs_replay == outs_co
+        replay_restarts = server.restarts
+
+        # Prepared-pytree checkpoint: restore must beat the cold prepare it
+        # skips (prepare_s measured above on the same tree).
+        _, save_s = timed(_ckpt.save_prepared, f"{tmp}/ckpt", 0, pparams)
+        restored, restore_s = timed(_ckpt.restore_prepared, f"{tmp}/ckpt", 0)
+        eng_rest = ServeEngine(model, restored, batch=1, max_seq=64,
+                               decode="scan")
+        restore_identical = eng_rest.generate(reqs[:2]) == outs_scan[:2]
+
     tps = lambda dt: total_tokens / dt
     ctps = lambda dt: ctokens / dt
     cold_speedup = tps(cold_s) / tps(cold_l)
@@ -565,6 +624,16 @@ def serve_decode_benchmark():
          f"syncs={syncs_co}"),
         ("serve/continuous_vs_chunked", "",
          f"cold={cont_cold:.2f}x;warm={cont_warm:.2f}x"),
+        ("serve/live_ops/hot_swap", "",
+         f"stage_s={staged.stage_seconds:.3f};flip_wait_s={flip_wait_s:.4f};"
+         f"tokens_identical={swap_identical};dropped={dropped}"),
+        ("serve/live_ops/kill_replay", "",
+         f"restarts={replay_restarts};tokens_identical={replay_identical};"
+         f"total_s={replay_s:.2f}"),
+        ("serve/live_ops/prepared_ckpt", "",
+         f"save_s={save_s:.3f};restore_s={restore_s:.3f};"
+         f"cold_prepare_s={prepare_s:.3f};"
+         f"speedup={prepare_s / max(restore_s, 1e-9):.1f}x"),
     ]
     LAST_SERVE_PAYLOAD = dict(
         section="serve",
@@ -595,6 +664,27 @@ def serve_decode_benchmark():
                             host_syncs=syncs_co,
                             admission_waves=syncs_co),
             speedup=dict(cold=cont_cold, warm=cont_warm),
+        ),
+        live_ops=dict(
+            hot_swap=dict(
+                stage_seconds=staged.stage_seconds,
+                flip_wait_seconds=flip_wait_s,
+                swap_wave=eng_swap.last_swap_wave,
+                tokens_identical=swap_identical,
+                dropped_requests=dropped,
+            ),
+            kill_replay=dict(
+                restarts=replay_restarts,
+                rebuilds=server.rebuilds,
+                tokens_identical=replay_identical,
+                serve_seconds=replay_s,
+            ),
+            prepared_ckpt=dict(
+                save_seconds=save_s,
+                restore_prepare_seconds=restore_s,
+                cold_prepare_seconds=prepare_s,
+                tokens_identical=restore_identical,
+            ),
         ),
         headline=dict(speedup=cold_speedup),
     )

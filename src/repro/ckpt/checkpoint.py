@@ -17,11 +17,26 @@ shard-oblivious.
 
 Crash safety: a checkpoint without ``_COMMITTED`` is ignored by
 ``latest_step`` / ``restore`` — torn writes from a mid-save failure can never
-be restored from (see the failure-injection test).
+be restored from (see the failure-injection test).  ``restore`` additionally
+validates the manifest's leaf count/shapes/dtypes against the requested
+structure, so a checkpoint from a *different* model/optimizer config fails
+with a readable error instead of silently mis-unflattening.
+
+**Prepared-pytree checkpoints** (:func:`save_prepared` /
+:func:`restore_prepared`) serialize weight-stationary serve trees —
+:class:`repro.core.PreparedLinear` / :class:`repro.core.QuantizedLinear`
+leaves included — *with* their static fields (spec, k, p) in the manifest, so
+a restore rebuilds the exact serve-ready tree without re-running
+``Model.prepare`` (the fast-cold-start path: restore skips
+``prepare_seconds`` entirely).  Per the LUT-replication rule the shared
+canonical/reordering tables are NOT stored: the manifest records each layer's
+``LutPack`` key and the restore rebuilds the packs per host
+(``repro.core.api._lut_pack_cache``).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
@@ -32,10 +47,22 @@ import jax
 import numpy as np
 
 _COMMIT = "_COMMITTED"
+PREPARED_VERSION = 1
 
 
 def _step_dir(base: str, step: int) -> str:
     return os.path.join(base, f"step_{step:09d}")
+
+
+def _step_of(name: str) -> Optional[int]:
+    """Parse a ``step_*`` directory name; None for anything else (stray
+    files, ``.tmp`` staging dirs, non-numeric suffixes like ``step_foo``)."""
+    if not name.startswith("step_") or name.endswith(".tmp"):
+        return None
+    try:
+        return int(name.split("_", 1)[1])
+    except ValueError:
+        return None
 
 
 def save(base: str, step: int, tree: Any) -> str:
@@ -77,24 +104,67 @@ def latest_step(base: str) -> Optional[int]:
         return None
     steps = []
     for name in os.listdir(base):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(base, name, _COMMIT)):
-                steps.append(int(name.split("_")[1]))
+        s = _step_of(name)
+        if s is not None and os.path.exists(os.path.join(base, name, _COMMIT)):
+            steps.append(s)
     return max(steps) if steps else None
 
 
-def restore(base: str, step: int, like: Any, *, shardings: Any = None) -> Any:
+def _validate_manifest(d: str, like_leaves: list) -> None:
+    """Leaf count/shape/dtype of the stored checkpoint must match ``like`` —
+    a checkpoint from a different model/optimizer structure fails loudly
+    instead of silently mis-unflattening into the wrong leaves."""
+    mpath = os.path.join(d, "manifest.json")
+    if not os.path.exists(mpath):
+        raise FileNotFoundError(f"checkpoint {d} has no manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    stored = manifest.get("leaves", [])
+    if len(stored) != len(like_leaves):
+        raise ValueError(
+            f"checkpoint {d} has {len(stored)} leaves but the requested "
+            f"structure has {len(like_leaves)} — it was written for a "
+            f"different model/optimizer config"
+        )
+    bad = []
+    for i, (meta, ref) in enumerate(zip(stored, like_leaves)):
+        want_shape = tuple(getattr(ref, "shape", ()) or ())
+        want_dtype = getattr(ref, "dtype", None)
+        if tuple(meta["shape"]) != want_shape:
+            bad.append(
+                f"leaf {i}: stored shape {tuple(meta['shape'])} != "
+                f"requested {want_shape}"
+            )
+        elif want_dtype is not None and meta["dtype"] != str(want_dtype):
+            bad.append(
+                f"leaf {i}: stored dtype {meta['dtype']} != "
+                f"requested {want_dtype}"
+            )
+    if bad:
+        shown = "; ".join(bad[:5]) + ("; ..." if len(bad) > 5 else "")
+        raise ValueError(
+            f"checkpoint {d} does not match the requested structure: {shown}"
+        )
+
+
+def restore(
+    base: str, step: int, like: Any, *, shardings: Any = None,
+    validate: bool = True,
+) -> Any:
     """Restore into the structure of ``like``; optionally re-shard leaves.
 
     ``like`` supplies the pytree structure (e.g. from ``jax.eval_shape``);
     ``shardings`` (same structure or a single sharding) device_puts each leaf
     — this is the elastic re-shard path: the stored full arrays go onto
-    whatever mesh the restarted job runs.
+    whatever mesh the restarted job runs.  ``validate`` (default) checks the
+    stored manifest's leaf count/shapes/dtypes against ``like`` first.
     """
     d = _step_dir(base, step)
     if not os.path.exists(os.path.join(d, _COMMIT)):
         raise FileNotFoundError(f"checkpoint {d} is not committed")
     leaves, treedef = jax.tree.flatten(like)
+    if validate:
+        _validate_manifest(d, leaves)
     out = []
     shard_leaves = (
         jax.tree.leaves(shardings)
@@ -117,12 +187,19 @@ def _is_single_sharding(s) -> bool:
 
 
 class AsyncCheckpointer:
-    """Overlaps checkpoint writes with training (one in-flight save)."""
+    """Overlaps checkpoint writes with training (one in-flight save).
+
+    A failure on the background thread (disk full, permissions, a corrupt
+    leaf) is captured and re-raised on the *next* ``save()`` / ``wait()``
+    call — silently losing checkpoints would turn the next crash into an
+    unrecoverable one.
+    """
 
     def __init__(self, base: str, keep_last: int = 3):
         self.base = base
         self.keep_last = keep_last
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     def save(self, step: int, tree: Any):
         self.wait()
@@ -135,14 +212,17 @@ class AsyncCheckpointer:
         self._thread.start()
 
     def _write(self, step: int, host_tree):
-        save(self.base, step, host_tree)
-        self._gc()
+        try:
+            save(self.base, step, host_tree)
+            self._gc()
+        except BaseException as e:  # captured; re-raised on the caller thread
+            self._error = e
 
     def _gc(self):
         steps = sorted(
-            int(n.split("_")[1])
+            s
             for n in os.listdir(self.base)
-            if n.startswith("step_") and not n.endswith(".tmp")
+            if (s := _step_of(n)) is not None
             and os.path.exists(os.path.join(self.base, n, _COMMIT))
         )
         for s in steps[: -self.keep_last]:
@@ -152,3 +232,231 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"background checkpoint write to {self.base} failed"
+            ) from err
+
+
+# ---------------------------------------------------------------------------
+# Prepared-pytree checkpoints: serve-ready trees, restore skips prepare
+# ---------------------------------------------------------------------------
+
+
+def _encode_node(node, arrays: list, path: str):
+    """Recursively encode a (possibly prepared) parameter tree into a JSON
+    manifest node, appending array leaves to ``arrays`` in visit order."""
+    from repro.core import PreparedLinear, QuantizedLinear
+
+    def arr_ref(a) -> Optional[int]:
+        if a is None:
+            return None
+        arrays.append(np.asarray(jax.device_get(a)))
+        return len(arrays) - 1
+
+    if isinstance(node, PreparedLinear):
+        spec = node.spec
+        return {
+            "kind": "prepared",
+            "spec": dataclasses.asdict(spec),
+            "k": node.k,
+            "p": node.p,
+            # The shared canonical/reordering tables are rebuilt per host
+            # from this key (LUT-replication rule), never stored.
+            "pack_key": [spec.bw, spec.ba, node.p, spec.w_kind, spec.a_kind],
+            "arrays": {
+                name: arr_ref(getattr(node, name))
+                for name in ("codes", "scale", "bias", "wcodes", "wpk",
+                             "wcanon", "onehot")
+            },
+        }
+    if isinstance(node, QuantizedLinear):
+        return {
+            "kind": "quantized",
+            "spec": dataclasses.asdict(node.spec),
+            "k": node.k,
+            "arrays": {
+                name: arr_ref(getattr(node, name))
+                for name in ("codes", "scale", "bias")
+            },
+        }
+    if isinstance(node, dict):
+        return {
+            "kind": "dict",
+            "items": {
+                k: _encode_node(v, arrays, f"{path}/{k}")
+                for k, v in node.items()
+            },
+        }
+    if isinstance(node, (list, tuple)):
+        return {
+            "kind": "list" if isinstance(node, list) else "tuple",
+            "items": [
+                _encode_node(v, arrays, f"{path}/{i}")
+                for i, v in enumerate(node)
+            ],
+        }
+    if node is None:
+        return {"kind": "none"}
+    if hasattr(node, "shape") or isinstance(node, (int, float, np.generic)):
+        return {"kind": "leaf", "array": arr_ref(node)}
+    raise TypeError(
+        f"cannot serialize node of type {type(node).__name__} at {path!r} "
+        f"in a prepared checkpoint"
+    )
+
+
+def _decode_node(node: dict, load):
+    from repro.core import LutLinearSpec, PreparedLinear, QuantizedLinear
+
+    kind = node["kind"]
+    if kind == "prepared":
+        spec = LutLinearSpec(**node["spec"])
+        a = {name: load(ref, host=(name == "onehot"))
+             for name, ref in node["arrays"].items()}
+        return PreparedLinear(spec=spec, k=node["k"], p=node["p"], **a)
+    if kind == "quantized":
+        spec = LutLinearSpec(**node["spec"])
+        a = {name: load(ref) for name, ref in node["arrays"].items()}
+        return QuantizedLinear(spec=spec, k=node["k"], **a)
+    if kind == "dict":
+        return {k: _decode_node(v, load) for k, v in node["items"].items()}
+    if kind == "list":
+        return [_decode_node(v, load) for v in node["items"]]
+    if kind == "tuple":
+        return tuple(_decode_node(v, load) for v in node["items"])
+    if kind == "none":
+        return None
+    if kind == "leaf":
+        return load(node["array"])
+    raise ValueError(f"unknown manifest node kind {kind!r}")
+
+
+def save_prepared(
+    base: str, step: int, tree: Any, *, plan_fingerprint: Optional[str] = None
+) -> str:
+    """Checkpoint a serve-ready (prepared) parameter tree; returns the dir.
+
+    Unlike :func:`save`, the manifest records the *static* fields of every
+    :class:`~repro.core.PreparedLinear` / :class:`~repro.core.QuantizedLinear`
+    leaf (spec, k, p, LutPack key) alongside its arrays, so
+    :func:`restore_prepared` rebuilds the exact pytree with **no** ``like``
+    structure and no ``Model.prepare`` pass.  ``plan_fingerprint`` optionally
+    stamps the :class:`repro.tune.ModelPlan` the tree was prepared under.
+    """
+    from repro.tune.plan import param_fingerprint
+
+    d = _step_dir(base, step)
+    tmp = d + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    arrays: list[np.ndarray] = []
+    root = _encode_node(tree, arrays, "")
+    manifest = {
+        "prepared_version": PREPARED_VERSION,
+        "step": step,
+        "fingerprint": param_fingerprint(tree),
+        "plan_fingerprint": plan_fingerprint,
+        "tree": root,
+        "leaves": [
+            {"shape": list(a.shape), "dtype": str(a.dtype)} for a in arrays
+        ],
+    }
+    for i, a in enumerate(arrays):
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), a)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, _COMMIT), "w") as f:
+        f.write("ok")
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.rename(tmp, d)
+    return d
+
+
+def prepared_meta(base: str, step: int) -> dict:
+    """The manifest header of a prepared checkpoint (fingerprints, leaf
+    stats) — readable without loading any arrays."""
+    d = _step_dir(base, step)
+    if not os.path.exists(os.path.join(d, _COMMIT)):
+        raise FileNotFoundError(f"checkpoint {d} is not committed")
+    with open(os.path.join(d, "manifest.json")) as f:
+        m = json.load(f)
+    if "prepared_version" not in m:
+        raise ValueError(f"checkpoint {d} is not a prepared checkpoint")
+    return {k: m[k] for k in
+            ("prepared_version", "step", "fingerprint", "plan_fingerprint")}
+
+
+def restore_prepared(
+    base: str, step: int, *, expect_fingerprint: Optional[str] = None
+) -> Any:
+    """Rebuild a serve-ready tree from a :func:`save_prepared` checkpoint.
+
+    This is the restore-only cold-start path: no ``like`` structure, no
+    quantize, no ``Model.prepare`` — arrays stream off disk into the exact
+    :class:`~repro.core.PreparedLinear` pytree that was saved, and each
+    distinct ``LutPack`` named in the manifest is rebuilt on this host
+    (warming ``repro.core.api._lut_pack_cache``, per the LUT-replication
+    rule).  ``expect_fingerprint`` refuses a checkpoint whose shape
+    fingerprint does not match the serving config it is restored for.
+    """
+    d = _step_dir(base, step)
+    if not os.path.exists(os.path.join(d, _COMMIT)):
+        raise FileNotFoundError(f"checkpoint {d} is not committed")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    version = manifest.get("prepared_version")
+    if version is None:
+        raise ValueError(
+            f"checkpoint {d} is a plain checkpoint (no static-field "
+            f"manifest); use ckpt.restore with a like structure"
+        )
+    if version > PREPARED_VERSION:
+        raise ValueError(
+            f"prepared checkpoint version {version} is newer than this "
+            f"build's {PREPARED_VERSION}"
+        )
+    if (
+        expect_fingerprint is not None
+        and manifest["fingerprint"] != expect_fingerprint
+    ):
+        raise ValueError(
+            f"prepared checkpoint fingerprint {manifest['fingerprint']} does "
+            f"not match the expected {expect_fingerprint}: shapes or "
+            f"quantization changed — re-prepare and re-save"
+        )
+
+    def load(ref: Optional[int], host: bool = False):
+        if ref is None:
+            return None
+        arr = np.load(os.path.join(d, f"leaf_{ref:05d}.npy"))
+        return arr if host else jax.numpy.asarray(arr)
+
+    tree = _decode_node(manifest["tree"], load)
+    _rebuild_packs(manifest["tree"])
+    return tree
+
+
+def _rebuild_packs(node: dict) -> None:
+    """Warm the per-host LUT pack cache for every distinct pack key the
+    restored tree's LUT-mode layers will consult at serve time."""
+    from repro.core.api import _lut_pack_cache
+
+    keys: set[tuple] = set()
+
+    def walk(n: dict):
+        if n["kind"] == "prepared" and n["spec"]["mode"] in ("lut", "stream"):
+            keys.add(tuple(n["pack_key"]))
+        for child in (
+            n.get("items", {}).values()
+            if isinstance(n.get("items"), dict)
+            else n.get("items", [])
+        ):
+            walk(child)
+
+    walk(node)
+    for bw, ba, p, w_kind, a_kind in sorted(keys):
+        _lut_pack_cache(bw, ba, p, w_kind, a_kind)

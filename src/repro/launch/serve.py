@@ -61,11 +61,27 @@ def main():
     ap.add_argument("--autotune", type=float, default=None, metavar="BUDGET_MB",
                     help="run the repro.tune planner inline under this "
                          "LUT-capacity budget (MB) and serve the result")
+    ap.add_argument("--prepared-ckpt", default=None, metavar="DIR",
+                    help="prepared-pytree checkpoint dir: restore the "
+                         "weight-stationary serve tree from it when present "
+                         "(fast cold start, skipping quantize+prepare "
+                         "entirely), else save one after preparing")
+    ap.add_argument("--request-log", default=None, metavar="PATH",
+                    help="serve under repro.serve.ops.LiveServer with a "
+                         "durable request log at PATH: every admission "
+                         "wave's tokens are fsynced, and a crashed engine "
+                         "restarts + replays in-flight slots "
+                         "token-identically (requires --decode scan)")
     args = ap.parse_args()
     if args.plan and args.autotune is not None:
         ap.error("--plan and --autotune are mutually exclusive")
     if (args.plan or args.autotune is not None) and args.dense:
         ap.error("--plan/--autotune require a quantized model")
+    if args.prepared_ckpt and args.dense:
+        ap.error("--prepared-ckpt requires a quantized model")
+    if args.request_log and args.decode != "scan":
+        ap.error("--request-log needs the continuous driver (--decode scan): "
+                 "wave-level token logging is its host-sync hook")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.profile != "baseline":
@@ -74,9 +90,22 @@ def main():
         cfg = apply_perf_profile(cfg, args.profile)
         print(f"perf profile: {args.profile}")
     model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
     plan = None
-    if not args.dense:
+    restored = False
+    if args.prepared_ckpt:
+        from repro.ckpt import checkpoint as ckpt
+
+        latest = ckpt.latest_step(args.prepared_ckpt)
+        if latest is not None:
+            t0 = time.time()
+            params = ckpt.restore_prepared(args.prepared_ckpt, latest)
+            print(f"restored prepared checkpoint step {latest} from "
+                  f"{args.prepared_ckpt} in {time.time()-t0:.2f}s "
+                  f"(skipped quantize + prepare)")
+            restored = True
+    if not restored:
+        params = model.init(jax.random.PRNGKey(0))
+    if not restored and not args.dense:
         t0 = time.time()
         params = model.quantize(
             params, LutLinearSpec(bw=args.bw, ba=args.ba, mode=args.mode)
@@ -113,6 +142,13 @@ def main():
     eng = ServeEngine(model, params, batch=args.batch, max_seq=args.max_seq,
                       decode=args.decode, prompt_bucket=args.prompt_bucket,
                       plan=plan)
+    if args.prepared_ckpt and not restored and (args.prepare or plan is not None):
+        from repro.ckpt import checkpoint as ckpt
+
+        t0 = time.time()
+        ckpt.save_prepared(args.prepared_ckpt, 0, eng.params)
+        print(f"saved prepared checkpoint to {args.prepared_ckpt} in "
+              f"{time.time()-t0:.2f}s (next cold start restores it)")
     rng = np.random.default_rng(0)
     reqs = [
         Request(
@@ -122,7 +158,22 @@ def main():
         for _ in range(args.requests)
     ]
     t0 = time.time()
-    outs = eng.generate(reqs)
+    if args.request_log:
+        from repro.serve.ops import LiveServer
+
+        eng_params = eng.params   # already prepared / plan-applied
+        server = LiveServer(
+            lambda: ServeEngine(model, eng_params, batch=args.batch,
+                                max_seq=args.max_seq, decode="scan",
+                                prompt_bucket=args.prompt_bucket),
+            log_path=args.request_log,
+        )
+        outs = server.serve(reqs)
+        eng = server.engine
+        print(f"live serve: {server.restarts} restarts, log at "
+              f"{args.request_log}")
+    else:
+        outs = eng.generate(reqs)
     dt = time.time() - t0
     total_tokens = sum(len(o) for o in outs)
     print(f"served {len(reqs)} requests, {total_tokens} tokens in {dt:.2f}s "

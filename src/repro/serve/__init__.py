@@ -1,1 +1,11 @@
-"""Serving runtime: KV-cache management, prefill/decode, batched driver."""
+"""Serving runtime: KV-cache management, prefill/decode, batched driver.
+
+* :mod:`repro.serve.serving`     — ``ServeEngine``: continuous in-flight
+                                   batching + wave-boundary hot-swap hooks
+* :mod:`repro.serve.ops`         — live operations: ``SwapController``
+                                   (double-buffered stage/flip) and
+                                   ``LiveServer`` (supervised crash recovery
+                                   with slot replay)
+* :mod:`repro.serve.request_log` — durable JSONL request/admission/token log
+                                   with torn-tail-tolerant ``replay_state``
+"""

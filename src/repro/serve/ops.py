@@ -1,0 +1,259 @@
+"""Live operations for the serving engine: hot-swap + supervised recovery.
+
+The deployment half of the paper's capacity-computation tradeoff: once a
+model serves traffic, its LUT plan is re-tuned, its weights are refreshed,
+and its hosts die — none of which may drop a request or change a token the
+numerics contract says is fixed.  Two objects wrap
+:class:`repro.serve.serving.ServeEngine` for this:
+
+* :class:`SwapController` — **double-buffered plan/weight hot-swap**.
+  ``stage()`` builds the replacement :class:`repro.core.PreparedLinear` tree
+  on a background thread (re-preparing raw weights, optionally under a new
+  :class:`repro.tune.ModelPlan`) while the engine keeps decoding on the
+  active tree; ``flip()`` hands the staged tree to
+  :meth:`ServeEngine.request_swap`, which installs it atomically at the next
+  admission-wave boundary — zero dropped requests, and a numerics-identical
+  swap (same weights, different plan/packing inside one numerics family) is
+  token-invisible.  Fingerprint-incompatible trees are refused at flip time
+  with the per-layer drift diagnostic; a failed stage or refused flip leaves
+  the active tree untouched.
+
+* :class:`LiveServer` — **supervised serving with slot replay**.  Wraps the
+  serve loop in :func:`repro.ft.supervisor.supervise`; every admission wave's
+  tokens are durably logged (:mod:`repro.serve.request_log`) at the wave's
+  host sync, and a restarted attempt rebuilds the engine (cold prepare or
+  :func:`repro.ckpt.checkpoint.restore_prepared` fast start) and resumes
+  each in-flight slot by teacher-forced replay — prefill
+  ``prompt + emitted``, decode the remaining budget — which the pad-masked
+  prefill makes token-identical to the undisturbed run.
+
+**Replay-exactness domain.**  Token-identical recovery needs numerics that
+are *batch-composition invariant* (a request's logits independent of which
+requests share its batch): dense, ``dequant`` and ``pallas`` models qualify
+(per-row float matmuls).  The int-LUT engines quantize activations with a
+dynamic per-**tensor** scale (:func:`repro.core.api.quantized_lut_gemm`), so
+their outputs depend on batch composition — bit-exact across a hot-swap
+(same schedule on both sides of the flip), but a restart re-buckets the
+surviving slots into new batches and replay is then faithful-greedy rather
+than bit-identical.  (Recurrent M/R/S units additionally consume pad through
+state — same caveat as the pad-mask invariance contract in
+``serve/serving.py``.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.ft.supervisor import RestartPolicy, supervise
+from repro.serve.request_log import RequestLog, replay_state
+from repro.serve.serving import Request, ServeEngine
+
+
+# ---------------------------------------------------------------------------
+# Hot-swap: background stage + wave-boundary flip
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SwapReport:
+    """What a completed flip cost: ``stage_seconds`` of background prepare
+    (overlapped with serving — not on the decode path), ``flip_wait_seconds``
+    from the flip request to the wave-boundary install (the only serving-
+    visible latency), and where it landed."""
+
+    stage_seconds: float
+    flip_wait_seconds: float
+    wave: Optional[int]
+    swaps: int
+
+
+class StagedSwap:
+    """Handle for a background ``stage()``: join it, read its tree/timing."""
+
+    def __init__(self, build: Callable[[], object]):
+        self.tree = None
+        self.error: Optional[BaseException] = None
+        self.stage_seconds = 0.0
+
+        def run():
+            t0 = time.perf_counter()
+            try:
+                self.tree = build()
+            except BaseException as e:  # surfaced on wait(), not swallowed
+                self.error = e
+            finally:
+                self.stage_seconds = time.perf_counter() - t0
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self, timeout: Optional[float] = None):
+        """Block until the stage finishes; returns the staged tree or
+        re-raises the build failure (the active tree is untouched either
+        way — staging is entirely off to the side)."""
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError("staged swap still building")
+        if self.error is not None:
+            raise RuntimeError("hot-swap stage failed; active tree "
+                               "untouched") from self.error
+        return self.tree
+
+
+class SwapController:
+    """Double-buffered parameter swaps against a live :class:`ServeEngine`."""
+
+    def __init__(self, engine: ServeEngine):
+        self.engine = engine
+
+    def stage(self, *, params=None, qparams=None, plan=None,
+              prepare_kw: Optional[dict] = None) -> StagedSwap:
+        """Start building the replacement tree on a background thread.
+
+        Exactly one source: ``params`` (an already-built tree, staged as-is)
+        or ``qparams`` (a raw quantized tree, prepared via
+        ``engine.model.prepare`` — under ``plan`` when given, i.e. a re-tune
+        swap).  Decode continues on the active tree throughout.
+        """
+        if (params is None) == (qparams is None):
+            raise ValueError("stage() needs exactly one of params=/qparams=")
+        if params is not None:
+            build = lambda: params
+        else:
+            kw = dict(n_hint=self.engine.batch)
+            kw.update(prepare_kw or {})
+            build = lambda: self.engine.model.prepare(qparams, plan=plan, **kw)
+        return StagedSwap(build)
+
+    def flip(self, staged: StagedSwap, *, check: bool = True,
+             wait: bool = True, timeout: float = 120.0) -> SwapReport:
+        """Install a staged tree at the next admission-wave boundary.
+
+        Joins the stage, hands the tree to ``request_swap`` (which refuses
+        fingerprint/dense drift when ``check``), then — when ``wait`` —
+        blocks until the serving thread reports the flip applied.  Returns
+        the :class:`SwapReport`; raises without touching the active tree if
+        the stage failed or the swap is refused.
+        """
+        tree = staged.wait(timeout)
+        applied = threading.Event()
+        t0 = time.perf_counter()
+        self.engine.request_swap(tree, check=check, on_applied=applied.set)
+        if wait and not applied.wait(timeout):
+            raise TimeoutError("hot-swap staged but not applied within "
+                               f"{timeout}s (engine stalled?)")
+        return SwapReport(
+            stage_seconds=staged.stage_seconds,
+            flip_wait_seconds=time.perf_counter() - t0,
+            wave=self.engine.last_swap_wave,
+            swaps=self.engine.swaps,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Supervised serving: durable log + slot replay
+# ---------------------------------------------------------------------------
+
+
+class LiveServer:
+    """Crash-recoverable serve: ``supervise``d engine + request-log replay.
+
+    ``engine_factory()`` builds a fresh :class:`ServeEngine` per attempt —
+    exactly what a restarted process would do (cold quantize+prepare, or the
+    fast path: ``restore_prepared`` from a prepared checkpoint).  Each
+    attempt reads the log's :func:`replay_state`, re-submits only the
+    unfinished remainder of every request (teacher-forced: prompt + durable
+    emitted prefix, remaining budget), and logs each new wave before the
+    engine's own bookkeeping — so the injected/real crash window between
+    "tokens computed" and "tokens returned" loses nothing and duplicates
+    nothing.
+
+    ``injector.maybe_fail_wave`` fires *after* the wave's log write (the
+    crash lands with that wave durable), at per-attempt wave numbering.
+    """
+
+    def __init__(
+        self,
+        engine_factory: Callable[[], ServeEngine],
+        *,
+        log_path: str,
+        policy: Optional[RestartPolicy] = None,
+        injector=None,
+        on_restart: Optional[Callable[[int, BaseException], None]] = None,
+    ):
+        self.engine_factory = engine_factory
+        self.log_path = str(log_path)
+        self.policy = policy or RestartPolicy()
+        self.injector = injector
+        self._user_on_restart = on_restart
+        self.engine: Optional[ServeEngine] = None
+        self.restarts = 0
+        self.rebuilds = 0               # engine_factory invocations
+
+    def serve(self, requests: list[Request]) -> list[list[int]]:
+        """Serve ``requests`` to completion across any number of restarts;
+        returns per-request tokens in order, token-identical to an
+        undisturbed run.  A pre-existing log at ``log_path`` resumes a
+        previous process's work (prompts are cross-checked)."""
+        log = RequestLog(self.log_path)
+        try:
+            prior = replay_state(self.log_path)
+            for i, r in enumerate(requests):
+                want = [int(t) for t in r.prompt]
+                if i in prior.requests:
+                    logged_prompt, logged_max = prior.requests[i]
+                    if logged_prompt != want or logged_max != r.max_new_tokens:
+                        raise ValueError(
+                            f"request {i} does not match the durable log at "
+                            f"{self.log_path}; refusing to replay a "
+                            f"different workload over it"
+                        )
+                else:
+                    log.log_request(i, want, r.max_new_tokens)
+
+            def body(_attempt: int):
+                state = replay_state(self.log_path)
+                engine = self.engine_factory()
+                self.engine = engine
+                self.rebuilds += 1
+                pend = state.pending()
+                results = {i: list(t) for i, t in state.emitted.items()}
+                gmap = [idx for idx, _, _ in pend]
+
+                def on_wave(wave, admitted, emitted):
+                    log.log_wave(
+                        wave,
+                        [(gmap[i], s) for i, s in admitted],
+                        [(gmap[i], s, toks) for i, s, toks in emitted],
+                    )
+                    if self.injector is not None:
+                        self.injector.maybe_fail_wave(wave)
+
+                engine.on_wave = on_wave
+                if pend:
+                    reqs = [
+                        Request(prompt=np.asarray(p, np.int32),
+                                max_new_tokens=rem)
+                        for _idx, p, rem in pend
+                    ]
+                    outs = engine.generate(reqs)
+                    for k, idx in enumerate(gmap):
+                        results.setdefault(idx, []).extend(outs[k])
+                return [results.get(i, []) for i in range(len(requests))]
+
+            def on_restart(attempt: int, exc: BaseException):
+                log.log_restart(attempt, repr(exc))
+                if self._user_on_restart is not None:
+                    self._user_on_restart(attempt, exc)
+
+            result, self.restarts = supervise(
+                body, policy=self.policy, on_restart=on_restart,
+            )
+            return result
+        finally:
+            log.close()

@@ -1,0 +1,149 @@
+"""Durable append-only request/admission log for crash-recoverable serving.
+
+One JSONL file records everything a restarted engine needs to resume
+mid-stream: the submitted requests (prompt + budget), every admission wave's
+``(request, slot)`` pairs, and — the payload that makes replay exact — the
+tokens each wave emitted per request, written at the wave's single host sync
+(:attr:`repro.serve.serving.ServeEngine.on_wave`) *before* the engine's own
+output bookkeeping.  A crash anywhere therefore loses at most tokens that
+were never durably logged, and :func:`replay_state` reconstructs each
+request's exact emitted prefix.
+
+Recovery then leans on the teacher-forced replay identity the pad-masked
+prefill guarantees (``tests/test_serving.py`` / ``tests/test_live_ops.py``):
+prefilling ``prompt + emitted`` and decoding the remaining
+``max_new - len(emitted)`` budget continues the greedy stream token-for-token
+identically to the undisturbed run — so a kill-and-replay serve is
+output-identical, not merely approximately resumed.
+
+Write discipline: every record is one JSON line, flushed **and fsynced**
+before ``append`` returns (the crash model is process death, so the tail
+must be on disk, not in a userspace buffer).  A crash mid-``write`` can
+still leave a torn final line; :func:`replay_state` tolerates exactly that —
+an undecodable *tail* line is dropped (``torn_tail=True``), while corruption
+anywhere earlier raises (that's disk damage, not a crash artifact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+
+class RequestLog:
+    """Append-only JSONL writer; every record is fsynced before return."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(self.path, "a", encoding="utf-8")
+
+    def append(self, record: dict) -> None:
+        self._f.write(json.dumps(record, separators=(",", ":")) + "\n")
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+    # --- typed records ----------------------------------------------------
+
+    def log_request(self, idx: int, prompt, max_new: int) -> None:
+        self.append({"t": "request", "i": int(idx),
+                     "prompt": [int(t) for t in prompt],
+                     "max_new": int(max_new)})
+
+    def log_wave(self, wave: int, admitted, emitted) -> None:
+        """One admission wave: ``admitted`` is ``[(request_idx, slot)]``,
+        ``emitted`` is ``[(request_idx, slot, tokens)]`` — request indices in
+        the *log's* (global) numbering, not a single generate() call's."""
+        self.append({
+            "t": "wave", "wave": int(wave),
+            "admit": [[int(i), int(s)] for i, s in admitted],
+            "emit": [[int(i), int(s), [int(t) for t in toks]]
+                     for i, s, toks in emitted],
+        })
+
+    def log_restart(self, attempt: int, reason: str = "") -> None:
+        self.append({"t": "restart", "attempt": int(attempt),
+                     "reason": str(reason)[:200]})
+
+    def log_swap(self, wave: Optional[int]) -> None:
+        self.append({"t": "swap",
+                     "wave": None if wave is None else int(wave)})
+
+    def close(self) -> None:
+        self._f.close()
+
+
+@dataclasses.dataclass
+class ReplayState:
+    """What the log proves happened — the restart's resume point."""
+
+    requests: dict[int, tuple[list[int], int]]   # idx -> (prompt, max_new)
+    emitted: dict[int, list[int]]                # idx -> durable tokens so far
+    waves: int = 0                               # wave records seen
+    restarts: int = 0                            # restart records seen
+    swaps: int = 0                               # swap records seen
+    torn_tail: bool = False                      # final line was torn
+
+    def remaining(self, idx: int) -> int:
+        _prompt, max_new = self.requests[idx]
+        return max_new - len(self.emitted.get(idx, []))
+
+    def pending(self) -> list[tuple[int, list[int], int]]:
+        """Requests not yet complete, as ``(idx, resume_prompt, budget)``:
+        prefill ``prompt + emitted`` and decode the remaining budget — the
+        teacher-forced continuation that is token-identical to never having
+        crashed."""
+        out = []
+        for idx in sorted(self.requests):
+            rem = self.remaining(idx)
+            if rem > 0:
+                prompt, _ = self.requests[idx]
+                out.append((idx, prompt + self.emitted.get(idx, []), rem))
+        return out
+
+    def completed(self) -> dict[int, list[int]]:
+        return {
+            idx: self.emitted.get(idx, [])
+            for idx in self.requests if self.remaining(idx) == 0
+        }
+
+
+def replay_state(path: str) -> ReplayState:
+    """Fold a (possibly torn-tailed) log into a :class:`ReplayState`.
+
+    Missing file == empty state (a fresh serve).  An undecodable final line
+    is a crash artifact and is dropped; an undecodable earlier line raises.
+    """
+    state = ReplayState(requests={}, emitted={})
+    if not os.path.exists(path):
+        return state
+    with open(path, "r", encoding="utf-8") as f:
+        raw = f.read()
+    lines = [ln for ln in raw.split("\n") if ln.strip()]
+    for li, line in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            if li == len(lines) - 1:
+                state.torn_tail = True
+                break
+            raise ValueError(
+                f"{path}: corrupt record at line {li + 1} (not the tail; "
+                f"this is not a torn-write artifact)"
+            )
+        t = rec.get("t")
+        if t == "request":
+            state.requests[rec["i"]] = (list(rec["prompt"]), rec["max_new"])
+        elif t == "wave":
+            state.waves += 1
+            for i, _slot, toks in rec["emit"]:
+                state.emitted.setdefault(i, []).extend(toks)
+        elif t == "restart":
+            state.restarts += 1
+        elif t == "swap":
+            state.swaps += 1
+    return state

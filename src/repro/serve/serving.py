@@ -53,12 +53,33 @@ pads through their state; only attention archs get exact invariance.)
   and transfers its token matrix **once** (``ServeEngine.host_syncs`` counts
   the crossings) — O(1) syncs per admission wave, independent of the wave's
   step count.  The loop oracle syncs every token.
+
+**Live operations** (``repro.serve.ops`` drives these hooks):
+
+* *Hot-swap*: :meth:`ServeEngine.request_swap` stages a replacement
+  parameter tree; the continuous driver installs it **atomically at the next
+  admission-wave boundary** (immediately when idle) — in-flight slots keep
+  decoding across the flip, zero requests dropped.  The staged tree must be
+  fingerprint-compatible with the active one (same quantized-leaf shapes /
+  bitwidths / numerics families, same dense remainder): shape or numerics
+  drift is refused with a per-layer diagnostic and the active tree untouched.
+  A numerics-identical swap (same weights under a different
+  :class:`repro.tune.ModelPlan`) is token-invisible; a weight update applies
+  to new admissions in full and to in-flight slots from their current
+  position (their KV rows were written by the old weights — standard
+  serving-upgrade semantics).
+* *Wave observability*: ``ServeEngine.on_wave(wave, admitted, emitted)``
+  fires once per admission wave, after the wave's single host sync, with the
+  per-request tokens the wave produced — the durable request log's write
+  point (``repro.serve.request_log``), and where failure injection lands
+  mid-serve.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -256,6 +277,14 @@ class ServeEngine:
         self.admissions: list[tuple[int, int]] = []   # (request_idx, slot),
                                                       # reset per generate()
                                                       # (indices are per-call)
+        # --- live-ops hooks (driven by repro.serve.ops) -------------------
+        self.on_wave = None             # callback(wave, admitted, emitted);
+                                        # emitted = [(req_idx, slot, tokens)]
+        self.swaps = 0                  # completed hot-swaps, cumulative
+        self.last_swap_wave: int | None = None
+        self._swap_pending = None       # (params, on_applied) under _swap_lock
+        self._swap_lock = threading.Lock()
+        self._serving = False
 
     def _fetch(self, x) -> np.ndarray:
         """The ONLY device→host crossing point — counted so the O(1)-syncs
@@ -276,17 +305,99 @@ class ServeEngine:
         """Serve a list of equal-or-ragged prompts; returns per-request
         greedy tokens in request order."""
         self._validate(requests)
-        if self.decode == "scan":
-            return self._generate_continuous(requests)
-        out: list[list[int]] = []
-        for start in range(0, len(requests), self.batch):
-            chunk = requests[start : start + self.batch]
-            out.extend(
-                self._generate_batch_chunked(chunk)
-                if self.decode == "chunked"
-                else self._generate_batch_loop(chunk)
+        self._serving = True
+        try:
+            if self.decode == "scan":
+                return self._generate_continuous(requests)
+            out: list[list[int]] = []
+            for start in range(0, len(requests), self.batch):
+                chunk = requests[start : start + self.batch]
+                out.extend(
+                    self._generate_batch_chunked(chunk)
+                    if self.decode == "chunked"
+                    else self._generate_batch_loop(chunk)
+                )
+            return out
+        finally:
+            self._serving = False
+            # Batch drained: the boundary a swap requested mid-final-wave
+            # (or mid-chunk in the non-continuous drivers) lands on.
+            self._poll_swap()
+
+    # --- live operations: double-buffered parameter hot-swap --------------
+
+    def request_swap(self, new_params, *, check: bool = True,
+                     on_applied=None) -> None:
+        """Stage ``new_params`` as the serving tree; the continuous driver
+        installs it atomically at the next admission-wave boundary (the
+        non-continuous drivers at the next batch boundary; immediately when
+        idle).  In-flight slots are never dropped: they continue decoding
+        across the flip.
+
+        ``check`` (default) refuses incompatible trees — quantized-leaf
+        fingerprint drift (shape / bitwidth / numerics-family changes,
+        diagnosed per layer) or a different dense remainder — leaving the
+        active tree untouched.  ``on_applied()`` fires on the serving thread
+        the moment the flip lands (swap-latency instrumentation)."""
+        if check:
+            errs = self._swap_drift(self.params, new_params)
+            if errs:
+                shown = "; ".join(errs[:6]) + ("; ..." if len(errs) > 6 else "")
+                raise ValueError(
+                    f"incompatible hot-swap refused (active tree untouched): "
+                    f"{shown}"
+                )
+        with self._swap_lock:
+            self._swap_pending = (new_params, on_applied)
+        if not self._serving:
+            self._poll_swap()
+
+    @staticmethod
+    def _swap_drift(old_params, new_params) -> list[str]:
+        """Why two trees cannot be hot-swapped (empty list == compatible):
+        the quantized leaves must share their plan-invariant identities
+        (``repro.tune.plan.describe_drift``) and the *dense* remainder —
+        embeddings, norms, anything un-quantized — must match leaf-for-leaf
+        in structure, shape and dtype.  The prepared products themselves
+        (``p``/``wcanon``/mode-within-family) may differ freely: those are
+        exactly what a plan swap replaces."""
+        from repro.tune.plan import describe_drift, map_quantized_leaves
+
+        msgs = describe_drift(old_params, new_params)
+
+        def dense_sig(params):
+            rest = map_quantized_leaves(params, lambda _p, _q: None)
+            leaves, treedef = jax.tree.flatten(rest)
+            # Non-array leaves degrade to their type name: a malformed tree
+            # is *refused* (signature mismatch), never a crash mid-check.
+            return (
+                str(treedef),
+                [(tuple(getattr(x, "shape", ())),
+                  str(getattr(x, "dtype", type(x).__name__)))
+                 for x in leaves],
             )
-        return out
+
+        if dense_sig(old_params) != dense_sig(new_params):
+            msgs.append(
+                "dense (non-quantized) parameter structure/shapes/dtypes "
+                "differ between the active and staged trees"
+            )
+        return msgs
+
+    def _poll_swap(self, wave: int | None = None) -> None:
+        """Install a pending staged tree, if any — the single point where
+        ``self.params`` changes while serving (called only between waves /
+        batches, never with a decode program in flight)."""
+        with self._swap_lock:
+            pending, self._swap_pending = self._swap_pending, None
+        if pending is None:
+            return
+        new_params, on_applied = pending
+        self.params = new_params
+        self.swaps += 1
+        self.last_swap_wave = wave
+        if on_applied is not None:
+            on_applied()
 
     # --- shared helpers ---------------------------------------------------
 
@@ -338,7 +449,12 @@ class ServeEngine:
         slot_req: list[int | None] = [None] * b   # request idx per slot
         slot_rem = [0] * b                        # decode steps still owed
         qi = 0
+        wave = 0
         while qi < len(queue) or any(s is not None for s in slot_req):
+            # Admission-wave boundary: no decode program in flight, so a
+            # staged hot-swap installs atomically here — new admissions
+            # prefill under the new tree, carried slots continue under it.
+            self._poll_swap(wave)
             # Admission: FIFO into free slots, as many as legally share one
             # prefill extent (singletons always fit, so the queue drains).
             admitted: list[int] = []
@@ -394,15 +510,27 @@ class ServeEngine:
             # The wave's single device->host sync; steps is host-known, so
             # only the used columns cross (the slice is outside the trace).
             mat = self._fetch(out_dev[:, : 1 + steps])
+            emitted: list[tuple[int, int, list[int]]] = []
             for s in range(b):
                 i = slot_req[s]
                 if i is None:
                     continue
                 lo = 0 if s in admitted else 1   # col 0 = wave-start token
-                outs[i].extend(int(t) for t in mat[s, lo : 1 + steps])
+                emitted.append((i, s, [int(t) for t in mat[s, lo : 1 + steps]]))
+            if self.on_wave is not None:
+                # Fires after the sync but before outs/slot bookkeeping: the
+                # request log's write point.  A crash here (injected or real)
+                # lands after the wave's tokens are durable, so replay resumes
+                # *including* this wave with no duplicates.
+                self.on_wave(
+                    wave, [(slot_req[s], s) for s in admitted], emitted,
+                )
+            for i, s, toks_w in emitted:
+                outs[i].extend(toks_w)
                 slot_rem[s] -= steps
                 if slot_rem[s] == 0:
                     slot_req[s] = None           # freed: next wave re-admits
+            wave += 1
         return outs
 
     # --- chunked driver: bucketed prefill + one fused decode per chunk ----

@@ -20,6 +20,12 @@ repro.launch.tune``; benchmark ``python -m benchmarks.run tune``.
 """
 
 from repro.tune.measure import Measurer  # noqa: F401
-from repro.tune.plan import LayerPlan, ModelPlan, param_fingerprint  # noqa: F401
+from repro.tune.plan import (  # noqa: F401
+    LayerPlan,
+    ModelPlan,
+    describe_drift,
+    leaf_identities,
+    param_fingerprint,
+)
 from repro.tune.planner import apply_plan, plan_model, verify_capacity  # noqa: F401
 from repro.tune.space import Candidate, layer_candidates  # noqa: F401

@@ -193,6 +193,22 @@ def numerics_family(spec) -> str:
     return spec.mode
 
 
+def leaf_identities(params) -> dict[str, tuple]:
+    """``path -> (codes.shape, k, bw, ba, w_kind, a_kind, family)`` for every
+    quantized leaf: the plan-invariant identity tuple the fingerprint hashes.
+    ``p``/``tile_n``/``wcanon``/mode-within-family are plan outputs and
+    deliberately absent — a raw tree and any re-preparation of the same
+    weights share identical identities."""
+    out: dict[str, tuple] = {}
+    for path, leaf in quantized_leaf_items(params):
+        spec = leaf.spec
+        out[path] = (
+            tuple(leaf.codes.shape), leaf.k, spec.bw, spec.ba,
+            spec.w_kind, spec.a_kind, numerics_family(spec),
+        )
+    return out
+
+
 def param_fingerprint(params) -> str:
     """Shape fingerprint of a parameter tree's quantized leaves.
 
@@ -206,11 +222,34 @@ def param_fingerprint(params) -> str:
     would change outputs, breaking the plans-never-change-numerics
     contract)."""
     h = hashlib.sha256()
-    for path, leaf in quantized_leaf_items(params):
-        spec = leaf.spec
-        h.update(
-            repr((path, tuple(leaf.codes.shape), leaf.k,
-                  spec.bw, spec.ba, spec.w_kind, spec.a_kind,
-                  numerics_family(spec))).encode()
-        )
+    for path, ident in leaf_identities(params).items():
+        h.update(repr((path,) + ident).encode())
     return h.hexdigest()[:32]
+
+
+_IDENT_FIELDS = ("codes shape", "k", "bw", "ba", "w_kind", "a_kind",
+                 "numerics family")
+
+
+def describe_drift(old_params, new_params) -> list[str]:
+    """Human-readable per-leaf differences between two trees' plan-invariant
+    identities — what changed when two fingerprints disagree (shape drift,
+    bitwidth drift, numerics-family drift, layers appearing/vanishing).
+    Empty list == fingerprint-compatible.  This is the diagnostic behind
+    hot-swap refusals (:meth:`repro.serve.serving.ServeEngine.request_swap`):
+    the refusal names the drifted layers instead of two opaque hashes."""
+    old_i, new_i = leaf_identities(old_params), leaf_identities(new_params)
+    msgs: list[str] = []
+    for path in sorted(set(old_i) | set(new_i)):
+        if path not in new_i:
+            msgs.append(f"{path}: quantized layer missing from new tree")
+        elif path not in old_i:
+            msgs.append(f"{path}: quantized layer absent from active tree")
+        elif old_i[path] != new_i[path]:
+            diffs = [
+                f"{name} {o!r} -> {n!r}"
+                for name, o, n in zip(_IDENT_FIELDS, old_i[path], new_i[path])
+                if o != n
+            ]
+            msgs.append(f"{path}: " + ", ".join(diffs))
+    return msgs

@@ -52,6 +52,67 @@ def test_latest_of_many_and_gc(tmp_path):
     assert len(kept) == 2  # GC kept the last two
 
 
+def test_latest_step_ignores_stray_entries(tmp_path):
+    """Directory-scan robustness: non-numeric step names, staging .tmp dirs
+    and stray files must not crash (or win) the latest-step scan or GC."""
+    ckpt.save(str(tmp_path), 2, _tree())
+    os.makedirs(tmp_path / "step_foo")
+    os.makedirs(tmp_path / "step_000000009.tmp")
+    (tmp_path / "step_abc").write_text("not a dir")
+    (tmp_path / "notes.txt").write_text("x")
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    w = ckpt.AsyncCheckpointer(str(tmp_path), keep_last=1)
+    w.save(3, _tree(3))
+    w.wait()                                  # GC walks the strays unfazed
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    assert os.path.isdir(tmp_path / "step_foo")   # strays left alone
+
+
+def test_async_writer_reraises_background_failure(tmp_path):
+    """A failed background write must surface on the next save()/wait() —
+    silently losing checkpoints turns the next crash into an unrecoverable
+    one."""
+    base = tmp_path / "base-is-a-file"
+    base.write_text("")                       # makedirs under it will fail
+    w = ckpt.AsyncCheckpointer(str(base))
+    w.save(1, _tree())
+    with pytest.raises(RuntimeError, match="background checkpoint write") as ei:
+        w.wait()
+    assert ei.value.__cause__ is not None     # original OSError chained
+    # The error is consumed once; the writer is usable again after.
+    w2 = ckpt.AsyncCheckpointer(str(tmp_path / "ok"))
+    w2.save(1, _tree())
+    w2.wait()
+    assert ckpt.latest_step(str(tmp_path / "ok")) == 1
+    # ...and the *next save()* also raises if wait() was never called.
+    w3 = ckpt.AsyncCheckpointer(str(base))
+    w3.save(1, _tree())
+    with pytest.raises(RuntimeError, match="background checkpoint write"):
+        w3.save(2, _tree())
+
+
+def test_restore_validates_structure_against_like(tmp_path):
+    ckpt.save(str(tmp_path), 5, _tree())
+    # Leaf-count mismatch: a different model/optimizer config.
+    with pytest.raises(ValueError, match="leaves"):
+        ckpt.restore(str(tmp_path), 5,
+                     jax.eval_shape(lambda: {"a": jnp.zeros((4, 5))}))
+    # Same count, wrong shape.
+    bad_shape = jax.eval_shape(lambda: _tree())
+    bad_shape["a"] = jax.ShapeDtypeStruct((5, 4), jnp.float32)
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(str(tmp_path), 5, bad_shape)
+    # Same shape, wrong dtype.
+    bad_dtype = jax.eval_shape(lambda: _tree())
+    bad_dtype["a"] = jax.ShapeDtypeStruct((4, 5), jnp.int32)
+    with pytest.raises(ValueError, match="dtype"):
+        ckpt.restore(str(tmp_path), 5, bad_dtype)
+    # validate=False preserves the old permissive behaviour.
+    out = ckpt.restore(str(tmp_path), 5, jax.eval_shape(lambda: _tree()),
+                       validate=False)
+    _assert_tree_equal(_tree(), out)
+
+
 def test_restore_resharding_roundtrip(tmp_path):
     """Elastic path: restore onto explicit (single-device) shardings."""
     t = _tree()

@@ -66,3 +66,133 @@ def test_exhausted_restarts_raise(tmp_path):
             # step 0 never checkpoints -> restart loops until exhausted
             injector=sup.FailureInjector(fail_at_steps=(0, 1, 2)),
         )
+
+
+# --- generic supervision: RestartPolicy semantics ------------------------
+
+
+def test_non_retryable_exception_propagates_immediately():
+    calls = []
+
+    def body(attempt):
+        calls.append(attempt)
+        raise ValueError("shape error: restarting would loop forever")
+
+    with pytest.raises(ValueError, match="shape error"):
+        sup.supervise(body, policy=sup.RestartPolicy(max_restarts=8))
+    assert calls == [0]                      # exactly one attempt, no retries
+
+
+def test_exhaustion_reraises_the_original_failure():
+    """max_restarts exhaustion re-raises the FIRST failure of the storm
+    (the root cause), chaining the last attempt's failure as __cause__."""
+    def body(attempt):
+        raise sup.InjectedFailure(f"crash #{attempt}")
+
+    with pytest.raises(sup.InjectedFailure, match="crash #0") as ei:
+        sup.supervise(body, policy=sup.RestartPolicy(max_restarts=2))
+    assert isinstance(ei.value.__cause__, sup.InjectedFailure)
+    assert "crash #2" in str(ei.value.__cause__)
+
+
+def test_supervise_recovers_and_reports_restart_count():
+    seen = []
+
+    def body(attempt):
+        if attempt < 2:
+            raise sup.InjectedFailure("transient")
+        return "done"
+
+    result, restarts = sup.supervise(
+        body, policy=sup.RestartPolicy(max_restarts=5),
+        on_restart=lambda n, e: seen.append((n, type(e).__name__)),
+    )
+    assert (result, restarts) == ("done", 2)
+    assert seen == [(1, "InjectedFailure"), (2, "InjectedFailure")]
+
+
+def test_backoff_is_deterministic_exponential_capped():
+    import random
+
+    pol = sup.RestartPolicy(backoff_s=1.0, backoff_factor=2.0,
+                            max_backoff_s=5.0, jitter_frac=0.1, seed=7)
+    a = [pol.delay_s(i, random.Random(pol.seed)) for i in (1, 2, 3, 4, 5)]
+    b = [pol.delay_s(i, random.Random(pol.seed)) for i in (1, 2, 3, 4, 5)]
+    assert a == b                            # seeded jitter is deterministic
+    for base, d in zip((1.0, 2.0, 4.0, 5.0, 5.0), a):   # capped at 5s
+        assert base <= d <= base * 1.1
+    # backoff_s=0 (the default) never sleeps
+    assert sup.RestartPolicy().delay_s(3, random.Random(0)) == 0.0
+
+
+def test_supervise_sleeps_the_policy_backoff():
+    slept = []
+
+    def body(attempt):
+        if attempt < 2:
+            raise sup.InjectedFailure("x")
+        return attempt
+
+    pol = sup.RestartPolicy(backoff_s=0.25, backoff_factor=2.0,
+                            jitter_frac=0.0, max_restarts=4)
+    _, restarts = sup.supervise(body, policy=pol, sleep=slept.append)
+    assert restarts == 2
+    assert slept == [0.25, 0.5]              # exponential, injected sleep
+
+
+# --- torn checkpoints + restore validation under supervision -------------
+
+
+def test_mid_checkpoint_kill_restores_previous_step(tmp_path):
+    """A crash mid-checkpoint-write (torn dir, no _COMMITTED) must roll the
+    restart back to the previous committed step — and still converge to the
+    clean run's exact trajectory."""
+    import os
+
+    from repro.ckpt import checkpoint as ckpt
+
+    tag = "torn"
+    # Run cleanly to step 12, checkpointing every 4 -> commits at 4, 8, 12.
+    state_c, _, _ = _run(tmp_path, fail_at=(), tag=tag)
+    d = str(tmp_path / tag)
+    # Simulate dying mid-write of a later checkpoint: torn dir, no commit.
+    os.makedirs(os.path.join(d, "step_000000016"))
+    assert ckpt.latest_step(d) == 12         # torn step 16 is invisible
+    # A fresh supervised run over the same dir resumes from 12 (already
+    # == n_steps, so it returns immediately with the committed state).
+    state_r, restarts, _ = _run(tmp_path, fail_at=(), tag=tag)
+    assert restarts == 0
+    for a, b in zip(jax.tree.leaves(state_c.params), jax.tree.leaves(state_r.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_validation_rejects_foreign_checkpoint(tmp_path):
+    """run_supervised validates restores through the manifest: a committed
+    checkpoint from a DIFFERENT config fails loudly (non-retryable), not by
+    silently mis-unflattening into the training state."""
+    from repro.ckpt import checkpoint as ckpt
+
+    d = tmp_path / "foreign"
+    ckpt.save(str(d), 4, {"not": {"the": jnp.zeros((3, 3))}})
+    init, step, batch_at = _setup()
+    with pytest.raises(ValueError, match="leaves|structure"):
+        sup.run_supervised(
+            cfg=sup.SupervisorConfig(ckpt_dir=str(d), ckpt_every=4),
+            init_state_fn=init, train_step_fn=step, batch_at=batch_at,
+            n_steps=8,
+        )
+
+
+def test_failure_injector_fires_once_per_wave():
+    inj = sup.FailureInjector(fail_at_waves=(2,))
+    inj.maybe_fail_wave(0)
+    inj.maybe_fail_wave(1)
+    with pytest.raises(sup.InjectedFailure, match="wave 2"):
+        inj.maybe_fail_wave(2)
+    inj.maybe_fail_wave(2)                   # fired set: restart survives it
+    # step and wave namespaces are independent
+    inj2 = sup.FailureInjector(fail_at_steps=(1,), fail_at_waves=(1,))
+    with pytest.raises(sup.InjectedFailure):
+        inj2.maybe_fail(1)
+    with pytest.raises(sup.InjectedFailure):
+        inj2.maybe_fail_wave(1)

@@ -1,0 +1,316 @@
+"""Live operations: wave-boundary hot-swap (token-identity + refusal),
+durable request log + kill-and-replay recovery, prepared-pytree checkpoints
+(fast cold start)."""
+
+import dataclasses as dc
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import LutLinearSpec
+from repro.ft import supervisor as sup
+from repro.models.model import build_model
+from repro.serve.ops import LiveServer, SwapController
+from repro.serve.request_log import RequestLog, replay_state
+from repro.serve.serving import Request, ServeEngine
+
+
+def _tiny_cfg():
+    return dc.replace(
+        get_config("stablelm-12b", smoke=True), name="live-ops-test",
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+        vocab_size=64,
+    )
+
+
+def _tiny_lut_model():
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = model.quantize(params, LutLinearSpec(bw=1, ba=3, p=2, mode="lut"))
+    return cfg, model, qparams
+
+
+def _tiny_dequant_model():
+    """Replay-identity tests need batch-composition-INVARIANT numerics
+    (dequant: per-row float matmul).  The int-lut engines quantize
+    activations with a dynamic per-tensor scale, so their outputs depend on
+    which requests share the batch — exact across a hot-swap (same
+    schedule), not across a restart's recomposed batches."""
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = model.quantize(params, LutLinearSpec(bw=4, ba=4, mode="dequant"))
+    return cfg, model, qparams
+
+
+def _reqs(cfg, budgets=(6, 2, 4, 2), plen=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                max_new_tokens=m)
+        for m in budgets
+    ]
+
+
+# --- hot-swap ------------------------------------------------------------
+
+
+def test_swap_while_idle_applies_immediately():
+    cfg, model, qparams = _tiny_lut_model()
+    eng = ServeEngine(model, model.prepare(qparams), batch=2, max_seq=32)
+    applied = []
+    eng.request_swap(model.prepare(qparams), on_applied=lambda: applied.append(1))
+    assert eng.swaps == 1 and applied == [1]
+
+
+def test_mid_stream_swap_is_token_identical_and_drops_nothing():
+    """THE swap gate: re-prepare the same weights at a different packing
+    (p=2 -> p=3, both int-lut: bit-identical family) and flip mid-stream at
+    a wave boundary.  Every request completes to its full budget with the
+    exact tokens of an undisturbed run — zero dropped, zero token drift."""
+    cfg, model, qparams = _tiny_lut_model()
+    q3 = model.quantize(
+        model.init(jax.random.PRNGKey(0)),
+        LutLinearSpec(bw=1, ba=3, p=3, mode="lut"),
+    )
+    tree_a, tree_b = model.prepare(qparams), model.prepare(q3)
+    baseline = ServeEngine(model, tree_a, batch=2, max_seq=32)
+    want = baseline.generate(_reqs(cfg))
+
+    eng = ServeEngine(model, tree_a, batch=2, max_seq=32)
+    seen = []
+
+    def on_wave(wave, admitted, emitted):
+        seen.append(wave)
+        if wave == 0:                      # request mid-stream, first wave
+            eng.request_swap(tree_b)
+
+    eng.on_wave = on_wave
+    got = eng.generate(_reqs(cfg))
+    assert got == want                     # token-identical across the flip
+    assert [len(o) for o in got] == [6, 2, 4, 2]   # zero dropped requests
+    assert eng.swaps == 1
+    assert eng.last_swap_wave == 1         # installed at the NEXT boundary
+    assert len(seen) >= 3                  # the flip happened mid-stream
+    assert eng.params is tree_b
+
+
+def test_incompatible_swap_refused_with_diagnostic_and_engine_serves_on():
+    cfg, model, qparams = _tiny_lut_model()
+    q_wide = model.quantize(
+        model.init(jax.random.PRNGKey(0)),
+        LutLinearSpec(bw=2, ba=3, p=2, mode="lut"),    # bitwidth drift
+    )
+    tree = model.prepare(qparams)
+    eng = ServeEngine(model, tree, batch=2, max_seq=32)
+    want = eng.generate(_reqs(cfg))
+    with pytest.raises(ValueError, match="bw"):
+        eng.request_swap(model.prepare(q_wide))
+    assert eng.params is tree and eng.swaps == 0      # active tree untouched
+    assert eng.generate(_reqs(cfg)) == want           # still serving, same bits
+
+    # Dense drift is refused too (a dense model's fingerprint is empty, so
+    # the quantized-leaf check alone would falsely accept anything).
+    dense = ServeEngine(model, model.init(jax.random.PRNGKey(0)),
+                        batch=2, max_seq=32)
+    other = build_model(dc.replace(_tiny_cfg(), d_ff=48))
+    with pytest.raises(ValueError, match="dense"):
+        dense.request_swap(other.init(jax.random.PRNGKey(0)))
+
+
+def test_swap_controller_stages_in_background_and_flips():
+    cfg, model, qparams = _tiny_lut_model()
+    eng = ServeEngine(model, model.prepare(qparams), batch=2, max_seq=32)
+    want = eng.generate(_reqs(cfg))
+    ctl = SwapController(eng)
+    staged = ctl.stage(qparams=qparams)        # background re-prepare
+    report = ctl.flip(staged)
+    assert report.swaps == 1 and report.stage_seconds >= 0.0
+    assert eng.generate(_reqs(cfg)) == want    # same weights, same tokens
+
+    with pytest.raises(ValueError, match="exactly one"):
+        ctl.stage(params=eng.params, qparams=qparams)
+    # A failed stage surfaces on flip and leaves the active tree untouched.
+    before = eng.params
+    bad = ctl.stage(qparams=qparams, prepare_kw={"bogus_kw": 1})
+    with pytest.raises(RuntimeError, match="stage failed"):
+        ctl.flip(bad)
+    assert eng.params is before
+    # A stage that "succeeds" with a malformed tree is refused at flip.
+    garbage = ctl.stage(params={"not": "a model tree"})
+    with pytest.raises(ValueError, match="incompatible hot-swap"):
+        ctl.flip(garbage)
+    assert eng.params is before
+
+
+# --- durable request log -------------------------------------------------
+
+
+def test_request_log_roundtrip_and_torn_tail(tmp_path):
+    path = str(tmp_path / "serve.jsonl")
+    log = RequestLog(path)
+    log.log_request(0, [5, 6, 7], 4)
+    log.log_request(1, [9], 2)
+    log.log_wave(0, [(0, 0), (1, 1)], [(0, 0, [11, 12]), (1, 1, [13, 14])])
+    log.log_wave(1, [], [(0, 0, [15])])
+    log.log_restart(1, "InjectedFailure")
+    log.log_swap(3)
+    log.close()
+
+    st = replay_state(path)
+    assert st.requests == {0: ([5, 6, 7], 4), 1: ([9], 2)}
+    assert st.emitted == {0: [11, 12, 15], 1: [13, 14]}
+    assert (st.waves, st.restarts, st.swaps) == (2, 1, 1)
+    assert st.completed() == {1: [13, 14]}
+    assert st.pending() == [(0, [5, 6, 7, 11, 12, 15], 1)]
+    assert not st.torn_tail
+
+    # A torn final line (crash mid-write) is dropped, not fatal.
+    with open(path, "a") as f:
+        f.write('{"t":"wave","wave":2,"em')
+    st2 = replay_state(path)
+    assert st2.torn_tail and st2.emitted == st.emitted
+
+    # Corruption that is NOT the tail is disk damage -> loud failure.
+    lines = open(path).read().splitlines()
+    lines[1] = '{"broken'
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(ValueError, match="corrupt record"):
+        replay_state(path)
+
+
+def test_replay_state_missing_file_is_empty(tmp_path):
+    st = replay_state(str(tmp_path / "absent.jsonl"))
+    assert st.requests == {} and st.pending() == []
+
+
+# --- kill-and-replay recovery --------------------------------------------
+
+
+def _live(model, tree, log_path, **kw):
+    return LiveServer(
+        lambda: ServeEngine(model, tree, batch=2, max_seq=32),
+        log_path=str(log_path), **kw,
+    )
+
+
+def test_kill_and_replay_is_token_identical(tmp_path):
+    """THE recovery gate: kill the engine mid-wave (after some requests'
+    tokens are durably logged, others still in flight), restart, replay —
+    output is token-for-token what an undisturbed run produces."""
+    cfg, model, qparams = _tiny_dequant_model()
+    tree = model.prepare(qparams)
+    want = ServeEngine(model, tree, batch=2, max_seq=32).generate(_reqs(cfg))
+
+    server = _live(model, tree, tmp_path / "log.jsonl",
+                   injector=sup.FailureInjector(fail_at_waves=(1,)))
+    got = server.serve(_reqs(cfg))
+    assert got == want
+    assert server.restarts == 1 and server.rebuilds == 2
+    st = replay_state(str(tmp_path / "log.jsonl"))
+    assert st.restarts == 1
+    # The durable log itself carries every request to completion.
+    assert {i: toks for i, toks in st.emitted.items()} == dict(enumerate(want))
+
+
+def test_replay_across_server_instances(tmp_path):
+    """Process-death shape: the first server dies for good (restart budget
+    0), a NEW server over the same log finishes the workload exactly."""
+    cfg, model, qparams = _tiny_dequant_model()
+    tree = model.prepare(qparams)
+    want = ServeEngine(model, tree, batch=2, max_seq=32).generate(_reqs(cfg))
+    log = tmp_path / "log.jsonl"
+
+    first = _live(model, tree, log,
+                  injector=sup.FailureInjector(fail_at_waves=(1,)),
+                  policy=sup.RestartPolicy(max_restarts=0))
+    with pytest.raises(sup.InjectedFailure):
+        first.serve(_reqs(cfg))
+    st = replay_state(str(log))
+    assert st.emitted and any(st.remaining(i) > 0 for i in st.requests)
+
+    second = _live(model, tree, log)
+    assert second.serve(_reqs(cfg)) == want
+
+    # A different workload over the same log is refused, not replayed.
+    with pytest.raises(ValueError, match="does not match the durable log"):
+        _live(model, tree, log).serve(_reqs(cfg, budgets=(1, 1, 1, 1)))
+
+
+def test_live_server_clean_run_has_no_restarts(tmp_path):
+    cfg, model, qparams = _tiny_dequant_model()
+    tree = model.prepare(qparams)
+    want = ServeEngine(model, tree, batch=2, max_seq=32).generate(_reqs(cfg))
+    server = _live(model, tree, tmp_path / "log.jsonl")
+    assert server.serve(_reqs(cfg)) == want
+    assert server.restarts == 0 and server.rebuilds == 1
+
+
+# --- prepared-pytree checkpoints -----------------------------------------
+
+
+def test_prepared_checkpoint_roundtrip_skips_prepare(tmp_path):
+    from repro.ckpt import checkpoint as ckpt
+    from repro.tune.plan import param_fingerprint
+
+    cfg, model, qparams = _tiny_lut_model()
+    tree = model.prepare(qparams)
+    want = ServeEngine(model, tree, batch=2, max_seq=32).generate(_reqs(cfg))
+
+    d = str(tmp_path / "prepared")
+    ckpt.save_prepared(d, 0, tree)
+    meta = ckpt.prepared_meta(d, 0)
+    assert meta["fingerprint"] == param_fingerprint(tree)
+
+    restored = ckpt.restore_prepared(
+        d, 0, expect_fingerprint=param_fingerprint(qparams)
+    )   # raw and prepared trees share the fingerprint (plan-invariant)
+    got = ServeEngine(model, restored, batch=2, max_seq=32).generate(_reqs(cfg))
+    assert got == want
+
+    with pytest.raises(ValueError, match="fingerprint"):
+        ckpt.restore_prepared(d, 0, expect_fingerprint="deadbeef")
+
+
+def test_restore_prepared_refuses_plain_checkpoint(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.ckpt import checkpoint as ckpt
+
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match="plain checkpoint"):
+        ckpt.restore_prepared(str(tmp_path), 1)
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore_prepared(str(tmp_path), 99)
+
+
+def test_prepared_checkpoint_stores_no_lut_tables(tmp_path):
+    """LUT-replication rule: the shared canonical/reordering tables are
+    rebuilt per host from the manifest's pack keys, never serialized —
+    stored bytes track the tree's own arrays only."""
+    import json
+
+    from repro.ckpt import checkpoint as ckpt
+
+    cfg, model, qparams = _tiny_lut_model()
+    tree = model.prepare(qparams)
+    d = ckpt.save_prepared(str(tmp_path), 0, tree)
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+
+    def pack_keys(node, acc):
+        if node.get("kind") == "prepared":
+            acc.add(tuple(node["pack_key"]))
+        items = node.get("items")
+        for child in (items.values() if isinstance(items, dict)
+                      else items or []):
+            pack_keys(child, acc)
+        return acc
+
+    keys = pack_keys(manifest["tree"], set())
+    assert keys, "lut-mode tree must record its pack keys"
+    assert all(k[:2] == (1, 3) for k in keys)          # (bw, ba, p, kinds)
