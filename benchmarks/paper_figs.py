@@ -439,6 +439,17 @@ _SERVE_MAX_NEW = 32
 _SERVE_CONT_BATCH = 2
 _SERVE_CONT_N_REQS = 40
 
+# Chaos sweep: a tiny *calibrated* int-lut model (the bit-exact replay
+# domain — frozen activation scales make the LUT quantizer batch-composition
+# invariant) killed at 25 seeded points: 5 per seam across the five crash
+# seams in repro.ft.chaos.  Tiny on purpose — the sweep restarts the serving
+# stack dozens of times and measures robustness, not throughput.
+_CHAOS_MODEL = dict(
+    n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=64
+)
+_CHAOS_QUANT = dict(bw=1, ba=3, p=2)
+_CHAOS_POINTS_PER_SEAM = 5
+
 
 def _run_serve_engine(engine, request_set, *, warm_iters: int = 1):
     """Cold (compiles included) + warm (steady-state) pass over one request
@@ -599,6 +610,41 @@ def serve_decode_benchmark():
                                decode="scan")
         restore_identical = eng_rest.generate(reqs[:2]) == outs_scan[:2]
 
+    # --- chaos: deterministic fault-injection sweep (repro.ft.chaos) ------
+    # 5 seams x _CHAOS_POINTS_PER_SEAM seeded kill points on a calibrated
+    # int-lut tree; the CI tier-1 gate requires dropped == 0 and
+    # token_mismatches == 0 across every point.
+    import jax.numpy as _jnp
+
+    from repro.ft.chaos import chaos_sweep as _chaos_sweep
+
+    ccfg = _dc.replace(
+        get_config("stablelm-12b", smoke=True), name="chaos-bench",
+        **_CHAOS_MODEL,
+    )
+    cmodel = build_model(ccfg)
+    cq = cmodel.quantize(
+        cmodel.init(jax.random.PRNGKey(0)),
+        LutLinearSpec(mode="lut", **_CHAOS_QUANT),
+    )
+    cal = _jnp.asarray(rng.integers(1, ccfg.vocab_size, (2, 8)), _jnp.int32)
+    cprep = cmodel.prepare(cq, calibrate=cal)
+    chaos_reqs = [
+        Request(
+            prompt=rng.integers(0, ccfg.vocab_size, 4 + i % 3).astype(np.int32),
+            max_new_tokens=mn,
+        )
+        for i, mn in enumerate((6, 2, 4, 2, 3, 5))
+    ]
+    # ^ six ragged requests through two slots -> >= 5 admission waves, so
+    #   the 5 seeded kill points per seam land on distinct waves.
+    with tempfile.TemporaryDirectory() as ctmp:
+        chaos, chaos_s = timed(
+            _chaos_sweep,
+            model=cmodel, prepared=cprep, requests=chaos_reqs, workdir=ctmp,
+            points_per_seam=_CHAOS_POINTS_PER_SEAM, seed=0,
+        )
+
     tps = lambda dt: total_tokens / dt
     ctps = lambda dt: ctokens / dt
     cold_speedup = tps(cold_s) / tps(cold_l)
@@ -634,6 +680,10 @@ def serve_decode_benchmark():
          f"save_s={save_s:.3f};restore_s={restore_s:.3f};"
          f"cold_prepare_s={prepare_s:.3f};"
          f"speedup={prepare_s / max(restore_s, 1e-9):.1f}x"),
+        ("serve/live_ops/chaos", "",
+         f"points={chaos['points']};dropped={chaos['dropped']};"
+         f"token_mismatches={chaos['token_mismatches']};"
+         f"restarts={chaos['restarts']};total_s={chaos_s:.1f}"),
     ]
     LAST_SERVE_PAYLOAD = dict(
         section="serve",
@@ -684,6 +734,18 @@ def serve_decode_benchmark():
                 restore_prepare_seconds=restore_s,
                 cold_prepare_seconds=prepare_s,
                 tokens_identical=restore_identical,
+            ),
+            chaos=dict(
+                model=dict(_CHAOS_MODEL),
+                quant=dict(_CHAOS_QUANT),
+                points=chaos["points"],
+                seams=chaos["seams"],
+                points_per_seam=chaos["points_per_seam"],
+                dropped=chaos["dropped"],
+                token_mismatches=chaos["token_mismatches"],
+                restarts=chaos["restarts"],
+                sweep_seconds=chaos_s,
+                results=chaos["results"],
             ),
         ),
         headline=dict(speedup=cold_speedup),

@@ -47,7 +47,10 @@ import jax
 import numpy as np
 
 _COMMIT = "_COMMITTED"
-PREPARED_VERSION = 1
+# v2: quantized/prepared leaves may carry a frozen activation scale
+# ("ascale", repro.core.calibrate).  v1 checkpoints restore fine (the field
+# defaults to None == dynamic scaling); newer-versioned ones are refused.
+PREPARED_VERSION = 2
 
 
 def _step_dir(base: str, step: int) -> str:
@@ -268,7 +271,7 @@ def _encode_node(node, arrays: list, path: str):
             "arrays": {
                 name: arr_ref(getattr(node, name))
                 for name in ("codes", "scale", "bias", "wcodes", "wpk",
-                             "wcanon", "onehot")
+                             "wcanon", "onehot", "ascale")
             },
         }
     if isinstance(node, QuantizedLinear):
@@ -278,7 +281,7 @@ def _encode_node(node, arrays: list, path: str):
             "k": node.k,
             "arrays": {
                 name: arr_ref(getattr(node, name))
-                for name in ("codes", "scale", "bias")
+                for name in ("codes", "scale", "bias", "ascale")
             },
         }
     if isinstance(node, dict):

@@ -12,6 +12,7 @@ Layers (bottom-up):
 * :mod:`repro.core.pim_cost`  — UPMEM cycle cost model (paper figures)
 * :mod:`repro.core.api`       — QuantizedLinear / apply_linear for the models
 * :mod:`repro.core.prepared`  — weight-stationary prepare/apply split
+* :mod:`repro.core.calibrate` — frozen activation scales (bit-exact replay)
 """
 
 from repro.core.api import (  # noqa: F401
@@ -21,6 +22,12 @@ from repro.core.api import (  # noqa: F401
     dequantize_weights,
     prepare_linear,
     quantize_linear,
+)
+from repro.core.calibrate import (  # noqa: F401
+    CalibrationProbe,
+    attach_scales,
+    calibrate_tree,
+    capture_scales,
 )
 from repro.core.luts import LutPack, build_lut_pack  # noqa: F401
 from repro.core.perfmodel import Plan, PlanInputs, make_plan  # noqa: F401

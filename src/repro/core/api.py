@@ -77,6 +77,12 @@ class QuantizedLinear:
         metadata=dict(static=True), default=LutLinearSpec()
     )
     k: int = dataclasses.field(metadata=dict(static=True), default=0)
+    # Frozen per-tensor activation scale (repro.core.calibrate).  When set,
+    # the lut/stream activation quantizer uses it instead of the dynamic
+    # per-batch max, making outputs batch-composition invariant — LUT-PIM
+    # tables are precomputed against a fixed input grid, so a static scale
+    # is the hardware-faithful regime.  None keeps the dynamic seed behavior.
+    ascale: Optional[Array] = None
 
     @property
     def f(self) -> int:
@@ -146,7 +152,9 @@ def apply_linear(q, x: Array, *, interpret: bool = True) -> Array:
             k=q.k,
             grid_kind=q.spec.w_kind,
             interpret=interpret,
-        ).reshape(x.shape[:-1] + (q.f,))
+        ).reshape(x.shape[:-1] + (q.f,)).astype(x.dtype)
+        # ^ kernel accumulates f32; cast back like every other mode so a
+        #   bf16 model's residual stream keeps its dtype through the scan.
     else:
         raise ValueError(f"unknown mode {mode}")
     if q.bias is not None:
@@ -185,9 +193,18 @@ def plan_p(f: int, k: int, n: int, spec: LutLinearSpec, device=None) -> int:
 def quantized_lut_gemm(q, x: Array, run) -> Array:
     """The activation side every LUT path shares — one body, so the raw and
     prepared implementations cannot drift numerically: quantize activations,
-    ``o = run(acodes, n)`` (the engine GEMM, [F, B]), rescale, reshape."""
-    xf = x.reshape(-1, x.shape[-1])                                 # [B, K]
-    acodes, ascale = quantize(xf.T, q.spec.aspec())                 # [K, B]
+    ``o = run(acodes, n)`` (the engine GEMM, [F, B]), rescale, reshape.
+
+    A calibrated layer (``q.ascale`` set) quantizes against its frozen scale,
+    so the result for any one row is independent of which other rows share
+    the batch — the invariance the bit-exact replay contract needs.  The
+    quantizer arithmetic runs in f32 regardless of activation dtype: XLA
+    recomputes bf16 fusions with f32 intermediates, so bf16 quantization is
+    not bit-stable across graph variants (frozen-vs-dynamic scale, jit
+    boundaries) — f32 ops are."""
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)             # [B, K]
+    frozen = getattr(q, "ascale", None)
+    acodes, ascale = quantize(xf.T, q.spec.aspec(), scale=frozen)   # [K, B]
     o = run(acodes, xf.shape[0])
     y = o.astype(jnp.float32) * q.scale[:, None] * ascale
     return y.T.reshape(x.shape[:-1] + (q.f,)).astype(x.dtype)
@@ -238,8 +255,9 @@ def stream_stats_for(q, x: Array, *, plan_only: bool = False) -> engine.StreamSt
 
     if plan_only:
         spec = q.spec
-        xf = x.reshape(-1, x.shape[-1])
-        acodes, _ = quantize(xf.T, spec.aspec())
+        xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        acodes, _ = quantize(xf.T, spec.aspec(),
+                             scale=getattr(q, "ascale", None))
         if isinstance(q, _prepared.PreparedLinear):
             p = q.p
         else:

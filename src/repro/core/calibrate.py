@@ -1,0 +1,170 @@
+"""Frozen activation calibration: capture static per-tensor activation scales.
+
+The int-LUT engines quantize activations with a *dynamic* per-tensor scale
+(``api.quantized_lut_gemm``): the scale is the max over whatever rows share
+the current batch, so one request's tokens depend on which other requests it
+was bucketed with.  That excludes ``lut``/``stream`` from the bit-exact
+replay contract — a restarted engine re-buckets its batches and drifts.
+
+LUT-based PIM hardware does not work that way: tables are precomputed
+against a *fixed* input grid (pLUTo; Khabbazan et al.), so a frozen
+activation scale is the faithful deployment regime, not an approximation
+knob.  This module captures that scale once per quantized leaf from a small
+calibration batch:
+
+1. :func:`capture_scales` wraps every quantized leaf in a
+   :class:`CalibrationProbe` (a pytree node carrying the leaf and its tree
+   path) and runs ONE forward pass.  The probe's apply hook
+   (:func:`probe_apply`, dispatched from ``models.layers.linear``) computes
+   the exact scale the dynamic quantizer would pick for the activations that
+   actually reach that leaf and ships it to the host through an **ordered**
+   ``io_callback`` — ordering matters because layer stacks run under
+   ``lax.scan``: one traced call site fires once per scanned unit, in unit
+   order, so a stacked leaf accumulates its per-unit scales in stack order.
+2. :func:`attach_scales` installs the captured scales on the (raw or
+   prepared) tree — a scalar per plain leaf, ``[stack]`` per scanned leaf
+   (``lax.scan`` slices it back to a scalar per unit, exactly like it
+   slices the packed codes).
+
+After attachment, ``quantized_lut_gemm`` quantizes against the frozen scale
+and every engine becomes batch-composition invariant.  Only the int-LUT
+modes consume the scale; ``dequant``/``pallas`` are float matmuls whose
+per-row outputs never depended on batch composition — calibration is the
+step that pulls the *paper-faithful* engines into the same replay domain.
+
+On the calibration batch itself, frozen apply is bit-identical to dynamic
+apply: the captured scale IS the dynamic scale of that batch
+(``tests/test_equivalence.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.core.api import apply_linear
+from repro.core.quantize import quantize
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CalibrationProbe:
+    """Pytree wrapper marking one quantized leaf for scale capture.
+
+    ``inner`` is the (Prepared)QuantizedLinear being probed; ``path`` is its
+    ``tune.plan`` tree path — static metadata, so a scan over probed stacked
+    leaves keeps the path while slicing the arrays.
+    """
+
+    inner: Any
+    path: str = dataclasses.field(metadata=dict(static=True), default="")
+
+
+# Capture tape: path -> [scale, ...] in call-site firing order.  Guarded by a
+# lock so two concurrent calibrations cannot interleave records.
+_TAPE: Optional[dict] = None
+_TAPE_LOCK = threading.Lock()
+
+
+def _record(path: str, scale) -> None:
+    if _TAPE is not None:
+        _TAPE.setdefault(path, []).append(
+            np.asarray(scale, dtype=np.float32).reshape(())
+        )
+
+
+def probe_apply(probe: CalibrationProbe, x: Array) -> Array:
+    """Apply hook for probed leaves: record the dynamic activation scale of
+    ``x`` (int-LUT modes only — the sole consumers of a frozen scale), then
+    run the real engine so downstream activations are faithful."""
+    q = probe.inner
+    if q.spec.mode in ("lut", "stream"):
+        xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        # The exact computation quantized_lut_gemm performs — reusing
+        # quantize() guarantees the frozen scale is bit-equal to the dynamic
+        # scale on the calibration batch.
+        _, scale = quantize(xf.T, q.spec.aspec())
+        io_callback(
+            functools.partial(_record, probe.path), None, scale, ordered=True
+        )
+    return apply_linear(q, x)
+
+
+def unwrap(p):
+    """Probe-or-leaf -> leaf (for dense paths that bypass ``apply_linear``,
+    e.g. MoE expert dequant einsums — those never consume an ascale)."""
+    return p.inner if isinstance(p, CalibrationProbe) else p
+
+
+def capture_scales(run_fn: Callable, params) -> dict[str, np.ndarray]:
+    """Run one calibration forward and return ``path -> frozen scale``.
+
+    ``run_fn(probed_params)`` must execute exactly one forward pass of the
+    model over the calibration batch.  Returns a scalar array per plain
+    leaf and a ``[stack]`` array per scanned leaf.  A leaf applied through
+    several call sites per pass (e.g. weight sharing) freezes the max scale
+    across sites — conservative, and still batch-composition invariant.
+    """
+    from repro.tune.plan import map_quantized_leaves
+
+    probed = map_quantized_leaves(
+        params, lambda path, leaf: CalibrationProbe(inner=leaf, path=path)
+    )
+    global _TAPE
+    with _TAPE_LOCK:
+        _TAPE = {}
+        try:
+            out = run_fn(probed)
+            if out is not None:
+                jax.block_until_ready(out)   # flush pending ordered callbacks
+            tape = _TAPE
+        finally:
+            _TAPE = None
+
+    from repro.tune.plan import quantized_leaf_items
+
+    stacks = {
+        path: int(np.prod(leaf.codes.shape[: leaf.codes.ndim - 2]))
+        if leaf.codes.ndim > 2 else 0
+        for path, leaf in quantized_leaf_items(params)
+    }
+    scales: dict[str, np.ndarray] = {}
+    for path, recs in tape.items():
+        stack = stacks.get(path, 0)
+        expect = stack if stack else 1
+        if len(recs) % expect:
+            raise ValueError(
+                f"calibration capture for {path!r} saw {len(recs)} records, "
+                f"not a multiple of its stack size {expect}"
+            )
+        arr = np.stack(recs).reshape(-1, expect).max(axis=0)   # [expect]
+        scales[path] = arr if stack else arr.reshape(())
+    return scales
+
+
+def attach_scales(params, scales: dict[str, np.ndarray]):
+    """Install captured frozen scales on a (raw or prepared) tree."""
+    from repro.tune.plan import map_quantized_leaves
+
+    def f(path, leaf):
+        s = scales.get(path)
+        if s is None:
+            return leaf
+        return dataclasses.replace(leaf, ascale=jnp.asarray(s, jnp.float32))
+
+    return map_quantized_leaves(params, f)
+
+
+def calibrate_tree(run_fn: Callable, params):
+    """capture + attach in one step: the ``Model.prepare(calibrate=...)``
+    backend.  ``params`` may be raw or already prepared."""
+    return attach_scales(params, capture_scales(run_fn, params))

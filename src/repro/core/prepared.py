@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core import engine, packing
 from repro.core.api import LutLinearSpec, QuantizedLinear, _lut_pack_cache
+from repro.core.quantize import quantize
 
 Array = jax.Array
 
@@ -80,6 +81,13 @@ class PreparedLinear:
     )
     k: int = dataclasses.field(metadata=dict(static=True), default=0)
     p: int = dataclasses.field(metadata=dict(static=True), default=1)
+    # Frozen per-tensor activation scale (scalar; [stack] on scanned leaves,
+    # sliced to a scalar per unit).  When set, the lut/stream activation
+    # quantizer uses it instead of the dynamic per-batch max — outputs become
+    # batch-composition invariant, the precondition for bit-exact replay
+    # across a restart's re-bucketed batches (repro.core.calibrate).
+    # dequant/pallas are float matmuls and ignore it.
+    ascale: Optional[Array] = None
 
     @property
     def f(self) -> int:
@@ -111,6 +119,8 @@ def prepare_linear(
     n_hint: int = 128,
     wcanon_max_entries: int = WCANON_MAX_ENTRIES,
     host_products: bool = True,
+    calibration: Optional[Array] = None,
+    ascale: Optional[Array] = None,
 ) -> PreparedLinear:
     """Freeze every weight-side product of ``q`` into a :class:`PreparedLinear`.
 
@@ -121,8 +131,24 @@ def prepare_linear(
     — required when this function runs under ``vmap`` over stacked layers
     (:func:`repro.models.model.prepare_params`), where tracers cannot leave
     the device.
+
+    ``calibration`` freezes the activation scale from a representative batch
+    ``[..., K]`` — the exact scale the dynamic quantizer would pick for that
+    batch, so prepared apply on the calibration batch stays bit-identical to
+    dynamic apply while becoming batch-composition invariant everywhere.
+    ``ascale`` installs an already-captured frozen scale (e.g. from
+    :mod:`repro.core.calibrate`); mutually exclusive with ``calibration``.
     """
     spec = q.spec
+    if calibration is not None and ascale is not None:
+        raise ValueError("pass calibration or ascale, not both")
+    if calibration is not None:
+        cf = calibration.reshape(-1, calibration.shape[-1]).astype(jnp.float32)
+        _, ascale = quantize(cf.T, spec.aspec())
+    if ascale is None:
+        ascale = getattr(q, "ascale", None)
+    if ascale is not None:
+        ascale = jnp.asarray(ascale, jnp.float32)
     if q.codes.ndim != 2:
         raise ValueError(
             f"prepare_linear handles single layers ([F, KB] codes); got "
@@ -177,6 +203,7 @@ def prepare_linear(
         spec=spec,
         k=q.k,
         p=p,
+        ascale=ascale,
     )
 
 
@@ -228,7 +255,9 @@ def apply_prepared(pl: PreparedLinear, x: Array, *, interpret: bool = True) -> A
             k=pl.k,
             grid_kind=pl.spec.w_kind,
             interpret=interpret,
-        ).reshape(x.shape[:-1] + (pl.f,))
+        ).reshape(x.shape[:-1] + (pl.f,)).astype(x.dtype)
+        # ^ kernel accumulates f32; cast back like every other mode so a
+        #   bf16 model's residual stream keeps its dtype through the scan.
     else:
         raise ValueError(f"unknown mode {mode}")
     if pl.bias is not None:

@@ -54,10 +54,17 @@ class FailureInjector:
     the admission-wave granularity the continuous scheduler exposes — i.e.
     mid-decode, after some requests' tokens are already emitted and logged,
     with other slots still in flight.
+
+    ``poison_requests`` models a *poison request*: unlike the fire-once
+    points above, it raises **every** time one of the named global request
+    indices emits in a wave (``maybe_fail_requests``) — a deterministic
+    replay-crasher, the adversary the LiveServer quarantine bisector exists
+    for.
     """
 
     fail_at_steps: tuple = ()
     fail_at_waves: tuple = ()
+    poison_requests: tuple = ()
     fired: set = dataclasses.field(default_factory=set)
 
     def maybe_fail(self, step: int):
@@ -70,6 +77,11 @@ class FailureInjector:
             self.fired.add(("wave", wave))
             raise InjectedFailure(f"injected failure at serve wave {wave}")
 
+    def maybe_fail_requests(self, global_idxs):
+        for idx in global_idxs:
+            if idx in self.poison_requests:
+                raise InjectedFailure(f"poison request {idx}")
+
 
 @dataclasses.dataclass
 class RestartPolicy:
@@ -81,6 +93,11 @@ class RestartPolicy:
     at ``max_backoff_s``) with multiplicative jitter in
     ``[1, 1 + jitter_frac]`` drawn from a seeded RNG, so a fleet of
     restarting workers de-synchronizes deterministically in tests.
+
+    ``deadline_s`` bounds total wall clock across ALL attempts: once the
+    supervised run has been alive that long, the next retryable failure
+    gives up even if restart attempts remain — an SLO guard against a slow
+    crash-loop that burns hours inside its nominal restart budget.
     """
 
     retryable: tuple = (InjectedFailure,)
@@ -90,6 +107,7 @@ class RestartPolicy:
     max_backoff_s: float = 30.0
     jitter_frac: float = 0.1
     seed: int = 0
+    deadline_s: Optional[float] = None    # total wall-clock giveup
 
     def delay_s(self, restart_idx: int, rng: random.Random) -> float:
         """Sleep before restart ``restart_idx`` (1-based)."""
@@ -107,7 +125,9 @@ def supervise(
     *,
     policy: Optional[RestartPolicy] = None,
     on_restart: Optional[Callable[[int, BaseException], None]] = None,
+    on_giveup: Optional[Callable[[BaseException], None]] = None,
     sleep: Callable[[float], None] = time.sleep,
+    clock: Callable[[], float] = time.monotonic,
 ):
     """Run ``body(attempt)`` under the restart policy; returns
     ``(result, restarts)``.
@@ -116,12 +136,17 @@ def supervise(
     restart count); it must be restartable — i.e. recover its own progress
     from durable state (checkpoints, the serving request log).  Retryable
     failures trigger a backoff + retry; the first failure is remembered and
-    re-raised when ``max_restarts`` is exhausted (with the final attempt's
-    failure chained as ``__cause__``).  Non-retryable failures propagate
-    immediately.
+    re-raised when ``max_restarts`` is exhausted OR ``policy.deadline_s``
+    of wall clock has elapsed (with the final attempt's failure chained as
+    ``__cause__``).  ``on_giveup(original_failure)`` fires right before
+    that re-raise — the hook callers use to flush durable state (e.g. the
+    serving request log) while the process is still intact.  Non-retryable
+    failures propagate immediately, without the hook.  ``clock`` is
+    injectable for deterministic deadline tests.
     """
     policy = policy or RestartPolicy()
     rng = random.Random(policy.seed)
+    t0 = clock()
     first_failure: Optional[BaseException] = None
     restarts = 0
     while True:
@@ -131,7 +156,13 @@ def supervise(
             if first_failure is None:
                 first_failure = e
             restarts += 1
-            if restarts > policy.max_restarts:
+            out_of_time = (
+                policy.deadline_s is not None
+                and clock() - t0 >= policy.deadline_s
+            )
+            if restarts > policy.max_restarts or out_of_time:
+                if on_giveup is not None:
+                    on_giveup(first_failure)
                 if first_failure is e:
                     raise
                 raise first_failure from e

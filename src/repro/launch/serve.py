@@ -66,6 +66,13 @@ def main():
                          "weight-stationary serve tree from it when present "
                          "(fast cold start, skipping quantize+prepare "
                          "entirely), else save one after preparing")
+    ap.add_argument("--calibrate", type=int, default=None, metavar="TOKENS",
+                    help="freeze per-layer activation scales from a seeded "
+                         "synthetic calibration batch of this many tokens "
+                         "at prepare time: the int-lut engines become "
+                         "batch-composition invariant, putting them in the "
+                         "bit-exact replay domain that --request-log "
+                         "kill+replay and hot-swap token-identity rely on")
     ap.add_argument("--request-log", default=None, metavar="PATH",
                     help="serve under repro.serve.ops.LiveServer with a "
                          "durable request log at PATH: every admission "
@@ -82,6 +89,13 @@ def main():
     if args.request_log and args.decode != "scan":
         ap.error("--request-log needs the continuous driver (--decode scan): "
                  "wave-level token logging is its host-sync hook")
+    if args.calibrate is not None and (
+        args.dense or not args.prepare
+        or args.plan or args.autotune is not None
+    ):
+        ap.error("--calibrate freezes activation scales during the plain "
+                 "prepare step: it requires a quantized model with "
+                 "--prepare (no --dense/--no-prepare/--plan/--autotune)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.profile != "baseline":
@@ -133,9 +147,23 @@ def main():
                   f"{plan.budget_bytes:,} B budget")
         elif args.prepare:
             t0 = time.time()
-            params = model.prepare(params)
-            print(f"prepared weight-stationary serve products in "
-                  f"{time.time()-t0:.1f}s")
+            if args.calibrate is not None:
+                import jax.numpy as jnp
+
+                crng = np.random.default_rng(1)
+                cal = jnp.asarray(
+                    crng.integers(1, cfg.vocab_size,
+                                  (2, max(1, args.calibrate // 2))),
+                    jnp.int32,
+                )
+                params = model.prepare(params, calibrate=cal)
+                print(f"prepared + froze activation scales on {cal.size} "
+                      f"synthetic calibration tokens in {time.time()-t0:.1f}s "
+                      f"(int-lut serving is now batch-composition invariant)")
+            else:
+                params = model.prepare(params)
+                print(f"prepared weight-stationary serve products in "
+                      f"{time.time()-t0:.1f}s")
 
     # ``plan`` routes through ServeEngine's autotuned path (spec rewrite +
     # prepare happen inside, fingerprint-checked).

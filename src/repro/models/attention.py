@@ -378,7 +378,9 @@ def _dense_weight(p) -> Array:
     W_kup/W_vup into the query/output paths, so it needs the matrix itself)."""
     from repro.core import QuantizedLinear
     from repro.core.api import dequantize_weights
+    from repro.core.calibrate import unwrap
 
+    p = unwrap(p)   # absorbed matrices never consume an activation scale
     if isinstance(p, QuantizedLinear):
         return dequantize_weights(p)
     return p["w"]

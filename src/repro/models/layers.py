@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import PreparedLinear, QuantizedLinear, apply_linear
+from repro.core.calibrate import CalibrationProbe, probe_apply
 
 Array = jax.Array
 
@@ -31,6 +32,8 @@ def dense_init(key, k: int, f: int, *, bias: bool = False, scale: float | None =
 def linear(p, x: Array) -> Array:
     if isinstance(p, (QuantizedLinear, PreparedLinear)):
         return apply_linear(p, x)
+    if isinstance(p, CalibrationProbe):   # one-shot scale-capture forward
+        return probe_apply(p, x)
     y = x @ p["w"].astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)

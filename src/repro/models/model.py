@@ -155,6 +155,9 @@ def prepare_params(params, plan=None, **kw):
 def maybe_dequant(p, dtype=jnp.bfloat16):
     """Raw-array-or-(Prepared)QuantizedLinear -> dense array (MoE einsums)."""
     from repro.core import PreparedLinear
+    from repro.core.calibrate import unwrap
+
+    p = unwrap(p)   # dense einsums have no activation quantizer to calibrate
 
     if isinstance(p, PreparedLinear) and p.wcodes is not None:
         # Prepared dequant-mode leaf: decode from the cached unpacked codes
@@ -217,10 +220,26 @@ class Model:
     def quantize(self, params, spec: LutLinearSpec):
         return quantize_model(params, self.cfg, spec)
 
-    def prepare(self, params, plan=None, **kw):
+    def prepare(self, params, plan=None, calibrate=None, **kw):
         """Weight-stationary serve form: cache all per-call weight products.
         ``plan`` applies a :class:`repro.tune.ModelPlan` (autotuned per-layer
-        configs) instead of preparing every leaf at its current spec."""
+        configs) instead of preparing every leaf at its current spec.
+
+        ``calibrate`` — a small token batch ``[B, S]`` — freezes each int-LUT
+        leaf's activation scale from one forward pass over it *before*
+        preparing (:mod:`repro.core.calibrate`).  Frozen scales make the
+        ``lut``/``stream`` engines batch-composition invariant, the
+        precondition for bit-exact replay across restarts and hot-swaps;
+        on the calibration batch itself outputs are bit-identical to the
+        dynamic-scale path.  When a ``plan`` is also given, calibration runs
+        first so planning fingerprints the calibrated tree."""
+        if calibrate is not None:
+            from repro.core import calibrate as _cal
+
+            tokens = jnp.asarray(calibrate)
+            params = _cal.calibrate_tree(
+                lambda probed: self.forward(probed, tokens)[0], params
+            )
         return prepare_params(params, plan=plan, **kw)
 
 

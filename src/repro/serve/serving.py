@@ -80,6 +80,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -228,6 +229,12 @@ def bucket_to(n: int, floor: int) -> int:
 class Request:
     prompt: np.ndarray                  # [S] int32
     max_new_tokens: int = 16
+    # Live-ops annotations (consumed by repro.serve.ops.LiveServer; the bare
+    # engine ignores them):
+    deadline_s: Optional[float] = None  # shed if still unfinished this many
+                                        # seconds after serve() starts
+    max_retries: Optional[int] = None   # per-request crash budget override
+                                        # (None -> server default)
 
 
 class ServeEngine:

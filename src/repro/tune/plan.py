@@ -231,25 +231,55 @@ _IDENT_FIELDS = ("codes shape", "k", "bw", "ba", "w_kind", "a_kind",
                  "numerics family")
 
 
+def calibration_digest(leaf) -> Optional[str]:
+    """Content digest of a leaf's frozen activation scale, or ``None`` when
+    the leaf quantizes activations dynamically (``repro.core.calibrate``).
+
+    Deliberately NOT part of :func:`param_fingerprint`: a plan changes which
+    engine runs, never numerics, and the frozen scale rides through any
+    re-preparation untouched — so plans stay valid across calibration.  It
+    IS part of :func:`describe_drift`: two trees with different frozen
+    scales produce different tokens, which hot-swap must refuse."""
+    import numpy as np
+
+    a = getattr(leaf, "ascale", None)
+    if a is None:
+        return None
+    arr = np.asarray(a, dtype=np.float32)
+    h = hashlib.sha256(arr.tobytes() + str(arr.shape).encode())
+    return h.hexdigest()[:16]
+
+
+def calibration_digests(params) -> dict[str, Optional[str]]:
+    return {p: calibration_digest(l) for p, l in quantized_leaf_items(params)}
+
+
 def describe_drift(old_params, new_params) -> list[str]:
     """Human-readable per-leaf differences between two trees' plan-invariant
     identities — what changed when two fingerprints disagree (shape drift,
-    bitwidth drift, numerics-family drift, layers appearing/vanishing).
-    Empty list == fingerprint-compatible.  This is the diagnostic behind
-    hot-swap refusals (:meth:`repro.serve.serving.ServeEngine.request_swap`):
-    the refusal names the drifted layers instead of two opaque hashes."""
+    bitwidth drift, numerics-family drift, calibration drift, layers
+    appearing/vanishing).  Empty list == swap-compatible.  This is the
+    diagnostic behind hot-swap refusals
+    (:meth:`repro.serve.serving.ServeEngine.request_swap`): the refusal
+    names the drifted layers instead of two opaque hashes."""
     old_i, new_i = leaf_identities(old_params), leaf_identities(new_params)
+    old_c, new_c = calibration_digests(old_params), calibration_digests(new_params)
     msgs: list[str] = []
     for path in sorted(set(old_i) | set(new_i)):
         if path not in new_i:
             msgs.append(f"{path}: quantized layer missing from new tree")
         elif path not in old_i:
             msgs.append(f"{path}: quantized layer absent from active tree")
-        elif old_i[path] != new_i[path]:
+        else:
             diffs = [
                 f"{name} {o!r} -> {n!r}"
                 for name, o, n in zip(_IDENT_FIELDS, old_i[path], new_i[path])
                 if o != n
             ]
-            msgs.append(f"{path}: " + ", ".join(diffs))
+            if old_c.get(path) != new_c.get(path):
+                diffs.append(
+                    f"calibration {old_c.get(path)!r} -> {new_c.get(path)!r}"
+                )
+            if diffs:
+                msgs.append(f"{path}: " + ", ".join(diffs))
     return msgs

@@ -1,0 +1,82 @@
+"""Deterministic chaos: every seeded kill point drops nothing, drifts nothing.
+
+Drives :func:`repro.ft.chaos.chaos_sweep` over all five fault seams on a
+*calibrated* int-lut serving tree (the bit-exact replay domain — see
+``repro/serve/ops.py``) and asserts the two invariants the live-ops layer
+sells: zero dropped requests and token-identical replay, for every point.
+The full 25-point sweep runs in ``benchmarks.run serve`` and the CI chaos
+job; here we take one point per seam to keep tier-1 fast while still
+covering every seam's failure mechanics.
+"""
+
+import dataclasses as dc
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import LutLinearSpec
+from repro.ft.chaos import SEAMS, chaos_sweep
+from repro.models.model import build_model
+from repro.serve.serving import Request
+
+
+def _calibrated_lut():
+    import jax.numpy as jnp
+
+    cfg = dc.replace(
+        get_config("stablelm-12b", smoke=True), name="chaos-test",
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+        vocab_size=64,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = model.quantize(params, LutLinearSpec(bw=1, ba=3, p=2, mode="lut"))
+    rng = np.random.default_rng(7)
+    cal = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 8)), jnp.int32)
+    return cfg, model, model.prepare(qparams, calibrate=cal)
+
+
+def _reqs(cfg, budgets=(6, 2, 4, 2), seed=3):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            prompt=rng.integers(0, cfg.vocab_size, 4 + i % 3).astype(np.int32),
+            max_new_tokens=m,
+        )
+        for i, m in enumerate(budgets)
+    ]
+
+
+def test_chaos_sweep_all_seams_green(tmp_path):
+    """One seeded kill per seam: every fault fires, every request completes
+    to budget with the reference tokens, and at least one restart happened
+    (the sweep actually killed things — it isn't vacuously green)."""
+    cfg, model, prepared = _calibrated_lut()
+    rep = chaos_sweep(
+        model=model, prepared=prepared, requests=_reqs(cfg),
+        workdir=str(tmp_path), points_per_seam=1, seed=0,
+    )
+    assert rep["points"] == len(SEAMS)
+    assert rep["seams"] == list(SEAMS)
+    assert rep["dropped"] == 0
+    assert rep["token_mismatches"] == 0
+    assert rep["restarts"] > 0
+    for r in rep["results"]:
+        assert r["fired"], r                 # every kill actually landed
+        assert r["dropped"] == 0 and r["token_mismatches"] == 0, r
+
+
+def test_chaos_sweep_is_seed_deterministic(tmp_path):
+    """Same seed -> bit-identical per-point reports (the red-run-reproduces
+    contract); the report carries every field CI gates on."""
+    cfg, model, prepared = _calibrated_lut()
+    kw = dict(model=model, prepared=prepared, requests=_reqs(cfg),
+              points_per_seam=1, seams=("mid_wave", "torn_tail"), seed=4)
+    a = chaos_sweep(workdir=str(tmp_path / "a"), **kw)
+    b = chaos_sweep(workdir=str(tmp_path / "b"), **kw)
+    assert a["results"] == b["results"]
+    for r in a["results"]:
+        assert {"seam", "point", "detail", "fired", "dropped",
+                "token_mismatches", "restarts", "rebuilds"} <= set(r)

@@ -168,6 +168,43 @@ def test_autotuned_plans_never_change_numerics(cfg, f, k, b, budget_kb, seed):
         assert np.array_equal(y_plan, y_raw), (path, mp.layers[path])
 
 
+@settings(max_examples=6, deadline=None)
+@given(cfg=st.sampled_from([(1, 3, 2), (2, 2, 3), (4, 4, 2), (2, 3, None)]),
+       mode=st.sampled_from(["lut", "stream"]),
+       f=st.integers(1, 10), k=st.integers(1, 18), b=st.integers(2, 6),
+       seed=st.integers(0, 2**16))
+def test_frozen_calibration_bit_identical_and_batch_invariant(
+    cfg, mode, f, k, b, seed
+):
+    """The frozen-activation-scale contract (repro.core.calibrate), at the
+    leaf: (1) on the calibration batch itself, the frozen quantizer picks
+    the same code grid as the dynamic one, so calibrated apply is BIT
+    identical to uncalibrated; (2) unlike the dynamic per-tensor scale, the
+    frozen scale makes per-row outputs independent of batch composition —
+    any row subset reproduces the full-batch rows bit for bit.  (2) is the
+    property that puts the int-LUT engines in the bit-exact replay domain
+    across a restart's re-bucketed batches."""
+    bw, ba, p = cfg
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, f)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, k)).astype(np.float32))
+    spec = api.LutLinearSpec(bw=bw, ba=ba, mode=mode, p=p)
+    q = api.quantize_linear(w, spec)
+    frozen = prepare_linear(q, calibration=x)
+    dyn = prepare_linear(q)
+
+    y_frozen = np.asarray(api.apply_linear(frozen, x))
+    y_dyn = np.asarray(api.apply_linear(dyn, x))
+    assert np.array_equal(y_frozen, y_dyn)          # (1) bit-identity
+
+    rows = rng.permutation(b)[: max(1, b // 2)]     # a re-bucketed "batch"
+    y_sub = np.asarray(api.apply_linear(frozen, x[rows]))
+    assert np.array_equal(y_sub, y_frozen[rows])    # (2) composition-free
+    # ...and the dynamic path is exactly what (2) protects against: its
+    # per-tensor scale follows the subset's max, so subset rows need not
+    # match (they MAY, when the subset contains the batch max row).
+
+
 @pytest.mark.parametrize("kind", ["int", "fp"])
 def test_float_grids_run_every_lut_engine(kind):
     """fp value grids flow through the same engines (float accumulation)."""

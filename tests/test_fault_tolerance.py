@@ -196,3 +196,57 @@ def test_failure_injector_fires_once_per_wave():
         inj2.maybe_fail(1)
     with pytest.raises(sup.InjectedFailure):
         inj2.maybe_fail_wave(1)
+
+
+# --- deadline giveup + on_giveup hook ------------------------------------
+
+
+def test_deadline_gives_up_before_restart_budget():
+    """deadline_s is an SLO guard: a slow crash-loop gives up on wall clock
+    even with restart attempts remaining, re-raising the FIRST failure and
+    firing on_giveup with it (injected clock: fully deterministic)."""
+    t = {"now": 0.0}
+    calls, giveups = [], []
+
+    def body(attempt):
+        calls.append(attempt)
+        t["now"] += 10.0                     # each attempt burns 10 "s"
+        raise sup.InjectedFailure(f"crash #{attempt}")
+
+    with pytest.raises(sup.InjectedFailure, match="crash #0"):
+        sup.supervise(
+            body,
+            policy=sup.RestartPolicy(max_restarts=100, deadline_s=25.0),
+            on_giveup=giveups.append,
+            clock=lambda: t["now"],
+        )
+    # attempts at t=10, 20 retry (< 25); the t=30 failure is out of time.
+    assert calls == [0, 1, 2]
+    assert len(giveups) == 1 and "crash #0" in str(giveups[0])
+
+
+def test_on_giveup_fires_on_exhaustion_with_root_cause():
+    giveups = []
+
+    def body(attempt):
+        raise sup.InjectedFailure(f"crash #{attempt}")
+
+    with pytest.raises(sup.InjectedFailure, match="crash #0"):
+        sup.supervise(body, policy=sup.RestartPolicy(max_restarts=2),
+                      on_giveup=giveups.append)
+    assert [str(g) for g in giveups] == ["crash #0"]
+
+
+def test_on_giveup_not_fired_for_non_retryable():
+    """Non-retryable failures propagate immediately WITHOUT the hook: the
+    hook is for flushing durable state on a crash-loop giveup, not a
+    general exception handler."""
+    giveups = []
+
+    def body(attempt):
+        raise ValueError("shape error")
+
+    with pytest.raises(ValueError, match="shape error"):
+        sup.supervise(body, policy=sup.RestartPolicy(max_restarts=8),
+                      on_giveup=giveups.append)
+    assert giveups == []

@@ -35,15 +35,41 @@ def _tiny_lut_model():
 
 
 def _tiny_dequant_model():
-    """Replay-identity tests need batch-composition-INVARIANT numerics
-    (dequant: per-row float matmul).  The int-lut engines quantize
-    activations with a dynamic per-tensor scale, so their outputs depend on
-    which requests share the batch — exact across a hot-swap (same
-    schedule), not across a restart's recomposed batches."""
+    """Replay-identity on batch-composition-INVARIANT numerics (dequant:
+    per-row float matmul) — exact with no calibration.  The int-lut engines
+    quantize activations with a dynamic per-tensor scale, so UNcalibrated
+    they depend on which requests share the batch; a frozen activation
+    calibration (``Model.prepare(..., calibrate=...)``) puts them in the
+    same bit-exact replay domain — see ``_calibrated_lut_tree`` below."""
     cfg = _tiny_cfg()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     qparams = model.quantize(params, LutLinearSpec(bw=4, ba=4, mode="dequant"))
+    return cfg, model, qparams
+
+
+def _calibration_batch(cfg, seed=7):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 8)), jnp.int32)
+
+
+def _calibrated_lut_tree():
+    """Calibrated int-lut serving tree: the frozen per-layer activation
+    scale makes the LUT quantizer batch-composition invariant, so restart
+    replay (re-bucketed batches) is bit-exact — the hardware-faithful
+    regime, since PIM LUTs are precomputed against a fixed input grid."""
+    cfg, model, qparams = _tiny_lut_model()
+    tree = model.prepare(qparams, calibrate=_calibration_batch(cfg))
+    return cfg, model, qparams, tree
+
+
+def _tiny_pallas_model():
+    cfg = _tiny_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = model.quantize(params, LutLinearSpec(bw=2, ba=4, mode="pallas"))
     return cfg, model, qparams
 
 
@@ -314,3 +340,297 @@ def test_prepared_checkpoint_stores_no_lut_tables(tmp_path):
     keys = pack_keys(manifest["tree"], set())
     assert keys, "lut-mode tree must record its pack keys"
     assert all(k[:2] == (1, 3) for k in keys)          # (bw, ba, p, kinds)
+
+
+# --- bit-exact replay for every servable engine (frozen calibration) -----
+
+
+def _ragged_reqs(cfg, budgets=(6, 2, 4, 2), seed=3):
+    """Ragged prompts + mixed budgets: a restart re-buckets the survivors
+    into different batch compositions than the undisturbed run."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            prompt=rng.integers(1, cfg.vocab_size, 4 + i % 3).astype(np.int32),
+            max_new_tokens=m,
+        )
+        for i, m in enumerate(budgets)
+    ]
+
+
+def test_kill_replay_identity_lut_calibrated(tmp_path):
+    """The tentpole: a CALIBRATED int-lut engine replays token-identically
+    across a kill+restart even though the surviving slots re-bucket into
+    new batch compositions — the frozen activation scale removes the
+    dynamic per-batch quantizer input."""
+    cfg, model, _q, tree = _calibrated_lut_tree()
+    reqs = _ragged_reqs(cfg)
+    fac = lambda: ServeEngine(model, tree, batch=2, max_seq=32)
+    want = fac().generate(reqs)
+
+    srv = LiveServer(
+        fac, log_path=str(tmp_path / "lut.jsonl"),
+        injector=sup.FailureInjector(fail_at_waves=(1,)),
+    )
+    got = srv.serve(reqs)
+    assert srv.restarts == 1
+    assert got == want          # bit-exact, not merely faithful-greedy
+
+
+def test_kill_replay_identity_pallas(tmp_path):
+    """pallas-mode (float dequant kernel) is per-row invariant with no
+    calibration needed — same kill+replay identity."""
+    cfg, model, qparams = _tiny_pallas_model()
+    tree = model.prepare(qparams)
+    reqs = _ragged_reqs(cfg)
+    fac = lambda: ServeEngine(model, tree, batch=2, max_seq=32)
+    want = fac().generate(reqs)
+
+    srv = LiveServer(
+        fac, log_path=str(tmp_path / "pallas.jsonl"),
+        injector=sup.FailureInjector(fail_at_waves=(1,)),
+    )
+    got = srv.serve(reqs)
+    assert srv.restarts == 1
+    assert got == want
+
+
+def test_calibration_rides_prepared_checkpoint(tmp_path):
+    """ascale survives the prepared-checkpoint round trip (v2 manifest) and
+    the restored tree serves bit-identically; v1-era trees (no ascale)
+    still restore (decode is kwargs-based)."""
+    from repro.ckpt import checkpoint as ckpt
+
+    cfg, model, _q, tree = _calibrated_lut_tree()
+    reqs = _ragged_reqs(cfg)
+    want = ServeEngine(model, tree, batch=2, max_seq=32).generate(reqs)
+
+    d = str(tmp_path / "prepared")
+    ckpt.save_prepared(d, 0, tree)
+    restored = ckpt.restore_prepared(d, 0)
+    from repro.tune.plan import quantized_leaf_items
+
+    scales = [l.ascale for _p, l in quantized_leaf_items(restored)]
+    assert scales and all(s is not None for s in scales)
+    got = ServeEngine(model, restored, batch=2, max_seq=32).generate(reqs)
+    assert got == want
+
+
+def test_calibration_drift_refuses_hot_swap():
+    """A calibration change IS a numerics change: hot-swapping a tree with
+    different (or missing) frozen scales must be refused even though the
+    shape/bitwidth fingerprint matches."""
+    cfg, model, qparams, tree = _calibrated_lut_tree()
+    uncal = model.prepare(qparams)
+    recal = model.prepare(
+        qparams, calibrate=_calibration_batch(cfg, seed=99) + 1
+    )
+    engine = ServeEngine(model, tree, batch=2, max_seq=32)
+    with pytest.raises(ValueError, match="calibration"):
+        engine.request_swap(uncal)
+    with pytest.raises(ValueError, match="calibration"):
+        engine.request_swap(recal)
+    engine.request_swap(model.prepare(
+        qparams, calibrate=_calibration_batch(cfg)
+    ))                                      # same calibration: accepted
+
+
+# --- poison-request quarantine -------------------------------------------
+
+
+def test_poison_request_quarantined_survivors_identical(tmp_path):
+    """A deterministic replay-crasher is bisected down to one request and
+    durably quarantined; the survivors complete token-identically and the
+    poison is *reported* (reason + partial prefix), never silently lost."""
+    cfg, model, _q, tree = _calibrated_lut_tree()
+    reqs = _ragged_reqs(cfg)
+    fac = lambda: ServeEngine(model, tree, batch=2, max_seq=32)
+    want = fac().generate(reqs)
+
+    for poison in (0, 2):
+        srv = LiveServer(
+            fac, log_path=str(tmp_path / f"poison{poison}.jsonl"),
+            policy=sup.RestartPolicy(max_restarts=8),
+            injector=sup.FailureInjector(poison_requests=(poison,)),
+        )
+        outs = srv.serve(reqs)
+        assert set(srv.quarantined) == {poison}
+        assert "poison" in srv.quarantined[poison] or \
+            "retry budget" in srv.quarantined[poison]
+        # supervisor budget NOT exhausted: bisection cost ~2+log2(n)
+        assert srv.restarts <= 4
+        for i in range(len(reqs)):
+            if i != poison:
+                assert outs[i] == want[i]
+        state = replay_state(str(tmp_path / f"poison{poison}.jsonl"))
+        assert poison in state.quarantined   # durable, survives the server
+
+
+def test_poison_retry_budget_quarantines_without_attribution(tmp_path):
+    """Request.max_retries is the blunt fallback: the request exceeding its
+    crash budget is quarantined outright, and the evidence chain resets so
+    no bystander is blamed."""
+    import dataclasses as _dc
+
+    cfg, model, _q, tree = _calibrated_lut_tree()
+    reqs = _ragged_reqs(cfg)
+    reqs[2] = _dc.replace(reqs[2], max_retries=1)
+    fac = lambda: ServeEngine(model, tree, batch=2, max_seq=32)
+    want = fac().generate(reqs)
+
+    srv = LiveServer(
+        fac, log_path=str(tmp_path / "budget.jsonl"),
+        policy=sup.RestartPolicy(max_restarts=8),
+        injector=sup.FailureInjector(poison_requests=(2,)),
+    )
+    outs = srv.serve(reqs)
+    assert set(srv.quarantined) == {2}
+    assert "retry budget" in srv.quarantined[2]
+    assert all(outs[i] == want[i] for i in range(len(reqs)) if i != 2)
+
+
+# --- bounded admission + deadline shedding -------------------------------
+
+
+def test_bounded_queue_backpressure(tmp_path):
+    cfg, model, _q, tree = _calibrated_lut_tree()
+    reqs = _ragged_reqs(cfg)
+    fac = lambda: ServeEngine(model, tree, batch=2, max_seq=32)
+    want = fac().generate(reqs)
+
+    srv = LiveServer(fac, log_path=str(tmp_path / "q.jsonl"), queue_limit=2)
+    assert srv.submit(reqs[0]) and srv.submit(reqs[1])
+    assert not srv.submit(reqs[2])          # backpressure, nothing buffered
+    srv.drain()
+    assert srv.submit(reqs[2])              # drained -> capacity again
+    outs = srv.drain()                      # earlier results carried by log
+    assert outs == want[:3]
+
+
+def test_deadline_shedding_reports_partial_prefix(tmp_path):
+    """A request whose deadline passes mid-outage is shed at the restart
+    boundary: durably logged, excluded from replay, reported with the
+    prefix it emitted.  Injected clock == deterministic."""
+    import dataclasses as _dc
+
+    cfg, model, _q, tree = _calibrated_lut_tree()
+    reqs = _ragged_reqs(cfg)
+    reqs[0] = _dc.replace(reqs[0], deadline_s=50.0)
+    fac = lambda: ServeEngine(model, tree, batch=2, max_seq=32)
+    want = fac().generate(reqs)
+
+    t = {"v": 0.0}
+    srv = LiveServer(
+        fac, log_path=str(tmp_path / "shed.jsonl"),
+        policy=sup.RestartPolicy(max_restarts=8),
+        injector=sup.FailureInjector(fail_at_waves=(0,)),
+        on_restart=lambda a, e: t.__setitem__("v", t["v"] + 100.0),
+        clock=lambda: t["v"],
+    )
+    outs = srv.serve(reqs)
+    assert set(srv.shed) == {0} and "deadline" in srv.shed[0]
+    assert 0 < len(outs[0]) < reqs[0].max_new_tokens
+    assert outs[0] == want[0][: len(outs[0])]    # durable prefix, no garbage
+    assert all(outs[i] == want[i] for i in range(len(reqs)) if i != 0)
+
+
+# --- request-log rotation, compaction, torn-tail healing -----------------
+
+
+def test_request_log_rotation_and_compaction(tmp_path):
+    cfg, model, _q, tree = _calibrated_lut_tree()
+    reqs = _ragged_reqs(cfg)
+    fac = lambda: ServeEngine(model, tree, batch=2, max_seq=32)
+    want = fac().generate(reqs)
+
+    import glob
+
+    path = str(tmp_path / "rot.jsonl")
+    srv = LiveServer(
+        fac, log_path=path, rotate_bytes=256,
+        injector=sup.FailureInjector(fail_at_waves=(1,)),
+    )
+    assert srv.serve(reqs) == want
+    assert glob.glob(path + ".*"), "size-triggered rotation produced segments"
+    st = replay_state(path)                 # folds across rotated segments
+    assert {i: st.emitted[i] for i in st.requests} == dict(enumerate(want))
+
+    log = RequestLog(path)
+    stats = log.compact()
+    log.close()
+    assert stats["after_bytes"] < stats["before_bytes"]
+    assert not glob.glob(path + ".*")       # segments folded away
+    st2 = replay_state(path)
+    assert {i: st2.emitted[i] for i in st2.requests} == dict(enumerate(want))
+    assert st2.restarts == st.restarts      # counters carried by compaction
+    # replaying the same workload over the compacted log: pure no-op serve
+    assert LiveServer(fac, log_path=path).serve(reqs) == want
+
+
+def test_torn_tail_healed_by_writer(tmp_path):
+    """A torn trailing line is dropped by readers AND truncated by the next
+    writer — otherwise the next append concatenates onto the torn prefix
+    and corrupts a record mid-file."""
+    path = str(tmp_path / "torn.jsonl")
+    log = RequestLog(path)
+    log.log_request(0, [1, 2], 4)
+    log.close()
+    with open(path, "a") as f:
+        f.write('{"t":"wave","wa')        # crash mid-append
+    st = replay_state(path)
+    assert st.torn_tail and list(st.requests) == [0]
+
+    log = RequestLog(path)                # writer reopen heals
+    assert log.healed_torn_tail
+    log.log_wave(0, [(0, 0)], [(0, 0, [5, 6])])
+    log.close()
+    st = replay_state(path)               # would raise "corrupt record"
+    assert not st.torn_tail               # if the heal hadn't truncated
+    assert st.emitted[0] == [5, 6]
+
+
+def test_corrupt_mid_file_still_raises(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write('{"t":"request","i":0,"prompt":[1],"max_new":2}\n')
+        f.write("garbage-not-json\n")
+        f.write('{"t":"wave","wave":0,"admit":[],"emit":[]}\n')
+    with pytest.raises(ValueError, match="corrupt record"):
+        replay_state(path)
+
+
+# --- swap-pipeline observability -----------------------------------------
+
+
+def test_swap_status_and_dead_stage_surfaced():
+    """A background stage that dies without recording an error must raise
+    loudly at flip() — a silent no-op swap is an outage in disguise — and
+    status() must expose the whole pipeline state."""
+    from repro.serve.ops import StagedSwap
+
+    cfg, model, qparams = _tiny_dequant_model()
+    tree = model.prepare(qparams)
+    engine = ServeEngine(model, tree, batch=2, max_seq=32)
+    ctrl = SwapController(engine)
+
+    st = ctrl.status()
+    assert not st["staging"] and not st["flip_pending"] and st["swaps"] == 0
+
+    def boom():
+        raise RuntimeError("oom while preparing")
+
+    staged = StagedSwap(boom)
+    ctrl.last_staged = staged
+    with pytest.raises(RuntimeError, match="stage failed"):
+        ctrl.flip(staged, timeout=30.0)
+    assert "oom" in ctrl.status()["stage_error"]
+
+    dead = StagedSwap(lambda: None)       # thread ends: no tree, no error
+    ctrl.last_staged = dead
+    with pytest.raises(RuntimeError, match="died without producing"):
+        ctrl.flip(dead, timeout=30.0)
+    assert ctrl.status()["stage_dead"]
+
+    good = ctrl.stage(params=tree)
+    rep = ctrl.flip(good, timeout=60.0)   # engine idle: applied immediately
+    assert rep.swaps == 1 and ctrl.status()["staged_ready"]

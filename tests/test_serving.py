@@ -191,7 +191,12 @@ def test_unbucketed_scan_matches_loop_at_every_length():
 def test_request_has_no_dead_generated_field():
     import dataclasses as dc
 
-    assert [f.name for f in dc.fields(Request)] == ["prompt", "max_new_tokens"]
+    # prompt + budget, plus the two LiveServer fault-domain knobs (deadline
+    # shedding, per-request crash budget) — and in particular no resurrected
+    # `generated` accumulator (tokens live in the engine, not the request).
+    assert [f.name for f in dc.fields(Request)] == [
+        "prompt", "max_new_tokens", "deadline_s", "max_retries",
+    ]
 
 
 # --- pad-masked prefill: bucketing invariance ---------------------------
