@@ -21,7 +21,11 @@ Sections:
               seed per-token loop, and continuous in-flight batching vs the
               fixed-chunk scheduler under a ragged Poisson-ish arrival mix
               (tokens/s, host-sync counts) at the fig13 default quant
-              config; writes BENCH_serve.json at the repo root
+              config; writes BENCH_serve.json at the repo root (now with an
+              ``slo`` section from a repro.obs-traced run: TTFT/TPOT/queue
+              percentiles + per-class goodput, and the zero-sync identity
+              flags) plus BENCH_serve_trace.json (Perfetto) and
+              BENCH_serve_metrics.jsonl
   tune        capacity-budgeted autotuned serving (repro.tune planner) vs a
               fixed whole-model LutLinearSpec, swept over >=3 LUT-budget
               points plus a degradation probe; verifies the plans' byte
@@ -67,6 +71,8 @@ SECTIONS = {
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
 STREAM_JSON = _ROOT / "BENCH_stream.json"
 SERVE_JSON = _ROOT / "BENCH_serve.json"
+SERVE_TRACE_JSON = _ROOT / "BENCH_serve_trace.json"
+SERVE_METRICS_JSONL = _ROOT / "BENCH_serve_metrics.jsonl"
 TUNE_JSON = _ROOT / "BENCH_tune.json"
 
 
@@ -92,6 +98,19 @@ def main() -> None:
             json.dumps(paper_figs.LAST_SERVE_PAYLOAD, indent=2) + "\n"
         )
         print(f"# wrote {SERVE_JSON}", file=sys.stderr)
+    # The serve section's traced leg: archive the Perfetto trace + metrics
+    # surface next to the payload (CI uploads both as build artifacts).
+    if paper_figs.LAST_SERVE_TRACE is not None:
+        SERVE_TRACE_JSON.write_text(
+            json.dumps(paper_figs.LAST_SERVE_TRACE) + "\n"
+        )
+        print(f"# wrote {SERVE_TRACE_JSON}", file=sys.stderr)
+    if paper_figs.LAST_SERVE_METRICS is not None:
+        SERVE_METRICS_JSONL.write_text(
+            "".join(json.dumps(r, separators=(",", ":")) + "\n"
+                    for r in paper_figs.LAST_SERVE_METRICS)
+        )
+        print(f"# wrote {SERVE_METRICS_JSONL}", file=sys.stderr)
     if paper_figs.LAST_TUNE_PAYLOAD is not None:
         TUNE_JSON.write_text(
             json.dumps(paper_figs.LAST_TUNE_PAYLOAD, indent=2) + "\n"

@@ -13,10 +13,18 @@ three live-operations legs fire:
 3. **Fast cold start** — the prepared serve tree is checkpointed and
    restored, skipping quantize + ``Model.prepare`` entirely on the rebuild.
 
-Run:  PYTHONPATH=src python examples/live_ops_serve.py
+With ``--trace``, one ``repro.obs`` observer records all of it — request
+lifecycles, swap stage/flip spans, the supervised restart and replay — and
+the run ends with a Perfetto trace you can load in ``chrome://tracing`` /
+``ui.perfetto.dev``, plus the human-readable metrics snapshot.  Tracing
+records only at existing host syncs: the token-identity asserts below hold
+with it on or off.
+
+Run:  PYTHONPATH=src python examples/live_ops_serve.py [--trace out.json]
 """
 
 import shutil
+import sys
 import time
 
 import jax
@@ -27,12 +35,19 @@ from repro.configs import get_config
 from repro.core import LutLinearSpec
 from repro.ft import supervisor as sup
 from repro.models.model import build_model
+from repro.obs import Observer, snapshot_text, write_perfetto
 from repro.serve.ops import LiveServer, SwapController
 from repro.serve.request_log import replay_state
 from repro.serve.serving import Request, ServeEngine
 
 RUN_DIR = "runs/example_live_ops"
 shutil.rmtree(RUN_DIR, ignore_errors=True)
+
+trace_path = None
+if "--trace" in sys.argv:
+    i = sys.argv.index("--trace")
+    trace_path = sys.argv[i + 1] if i + 1 < len(sys.argv) else f"{RUN_DIR}/trace.json"
+obs = Observer() if trace_path else None
 
 cfg = get_config("stablelm-12b", smoke=True)
 model = build_model(cfg)
@@ -54,11 +69,11 @@ reqs = [
 baseline = ServeEngine(model, tree, batch=2, max_seq=32).generate(reqs)
 
 # --- 1. hot-swap at a wave boundary, mid-stream --------------------------
-eng = ServeEngine(model, tree, batch=2, max_seq=32)
+eng = ServeEngine(model, tree, batch=2, max_seq=32, obs=obs)
 ctl = SwapController(eng)
 staged = ctl.stage(qparams=qparams)            # background re-prepare
-eng.on_wave = lambda wave, admitted, emitted: (
-    eng.request_swap(staged.wait()) if wave == 1 else None
+eng.on_wave = lambda rec: (
+    eng.request_swap(staged.wait()) if rec.wave == 1 else None
 )
 swapped = eng.generate(reqs)
 assert swapped == baseline, "hot-swap changed tokens"
@@ -71,6 +86,7 @@ server = LiveServer(
     lambda: ServeEngine(model, tree, batch=2, max_seq=32),
     log_path=f"{RUN_DIR}/serve.jsonl",
     injector=sup.FailureInjector(fail_at_waves=(1,)),
+    obs=obs, trace_path=trace_path,
 )
 replayed = server.serve(reqs)
 assert replayed == baseline, "replay changed tokens"
@@ -87,4 +103,11 @@ assert ServeEngine(model, restored, batch=2, max_seq=32).generate(reqs) == basel
 print(f"fast cold start: restore {restore_s:.3f}s vs cold prepare "
       f"{prepare_s:.3f}s ({prepare_s / max(restore_s, 1e-9):.0f}x)")
 assert restore_s < prepare_s
+
+# --- 4. the whole story as one Perfetto trace ----------------------------
+if obs is not None:
+    path = write_perfetto(obs, trace_path)
+    print(snapshot_text(obs, title="live-ops serve"))
+    print(f"perfetto trace: {path} ({len(obs.tracer)} events) — load it in "
+          f"chrome://tracing or ui.perfetto.dev")
 print("live-ops serving example OK")

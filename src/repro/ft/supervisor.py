@@ -38,6 +38,8 @@ from typing import Callable, Optional
 
 import jax
 
+from repro import timing
+
 from repro.ckpt import checkpoint as ckpt
 
 
@@ -127,7 +129,7 @@ def supervise(
     on_restart: Optional[Callable[[int, BaseException], None]] = None,
     on_giveup: Optional[Callable[[BaseException], None]] = None,
     sleep: Callable[[float], None] = time.sleep,
-    clock: Callable[[], float] = time.monotonic,
+    clock: Callable[[], float] = timing.clock,
 ):
     """Run ``body(attempt)`` under the restart policy; returns
     ``(result, restarts)``.
@@ -142,7 +144,9 @@ def supervise(
     that re-raise — the hook callers use to flush durable state (e.g. the
     serving request log) while the process is still intact.  Non-retryable
     failures propagate immediately, without the hook.  ``clock`` is
-    injectable for deterministic deadline tests.
+    injectable for deterministic deadline tests and defaults to the
+    process-wide :func:`repro.timing.clock`, so ``timing.override_clock``
+    steers supervision deadlines and trace timestamps from one place.
     """
     policy = policy or RestartPolicy()
     rng = random.Random(policy.seed)

@@ -79,6 +79,18 @@ def main():
                          "wave's tokens are fsynced, and a crashed engine "
                          "restarts + replays in-flight slots "
                          "token-identically (requires --decode scan)")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="record the zero-sync repro.obs trace and write it "
+                         "as Chrome/Perfetto trace_event JSON (load in "
+                         "chrome://tracing or ui.perfetto.dev); recording "
+                         "happens only at existing host syncs, so tokens "
+                         "and sync counts are identical with or without it")
+    ap.add_argument("--metrics", nargs="?", const="-", default=None,
+                    metavar="OUT_JSONL",
+                    help="print the repro.obs metrics + SLO snapshot after "
+                         "serving; with a PATH, also write the full metrics "
+                         "surface (snapshot, SLO stats, per-request "
+                         "lifecycle records) as JSONL")
     args = ap.parse_args()
     if args.plan and args.autotune is not None:
         ap.error("--plan and --autotune are mutually exclusive")
@@ -165,11 +177,16 @@ def main():
                 print(f"prepared weight-stationary serve products in "
                       f"{time.time()-t0:.1f}s")
 
+    obs = None
+    if args.trace or args.metrics:
+        from repro.obs import Observer
+
+        obs = Observer()
     # ``plan`` routes through ServeEngine's autotuned path (spec rewrite +
     # prepare happen inside, fingerprint-checked).
     eng = ServeEngine(model, params, batch=args.batch, max_seq=args.max_seq,
                       decode=args.decode, prompt_bucket=args.prompt_bucket,
-                      plan=plan)
+                      plan=plan, obs=obs)
     if args.prepared_ckpt and not restored and (args.prepare or plan is not None):
         from repro.ckpt import checkpoint as ckpt
 
@@ -195,6 +212,7 @@ def main():
                                 max_seq=args.max_seq, decode="scan",
                                 prompt_bucket=args.prompt_bucket),
             log_path=args.request_log,
+            obs=obs, trace_path=args.trace,
         )
         outs = server.serve(reqs)
         eng = server.engine
@@ -211,6 +229,18 @@ def main():
         print(f"admission order (request -> slot): {eng.admissions}")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o}")
+    if obs is not None:
+        from repro.obs import snapshot_text, write_metrics_jsonl, write_perfetto
+
+        if args.trace:
+            path = write_perfetto(obs, args.trace)
+            print(f"perfetto trace: {path} ({len(obs.tracer)} events, "
+                  f"{obs.tracer.dropped} dropped)")
+        if args.metrics:
+            print(snapshot_text(obs, title=f"repro.serve {args.arch}"))
+            if args.metrics != "-":
+                path = write_metrics_jsonl(obs, args.metrics)
+                print(f"metrics jsonl: {path}")
 
 
 if __name__ == "__main__":

@@ -69,11 +69,11 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Callable, Optional
 
 import numpy as np
 
+from repro import timing
 from repro.ft.supervisor import RestartPolicy, supervise
 from repro.serve.request_log import RequestLog, replay_state
 from repro.serve.serving import Request, ServeEngine
@@ -100,19 +100,26 @@ class SwapReport:
 class StagedSwap:
     """Handle for a background ``stage()``: join it, read its tree/timing."""
 
-    def __init__(self, build: Callable[[], object]):
+    def __init__(self, build: Callable[[], object], obs=None):
         self.tree = None
         self.error: Optional[BaseException] = None
         self.stage_seconds = 0.0
+        self._obs = obs
 
         def run():
-            t0 = time.perf_counter()
+            t0 = timing.clock()
             try:
                 self.tree = build()
             except BaseException as e:  # surfaced on wait(), not swallowed
                 self.error = e
             finally:
-                self.stage_seconds = time.perf_counter() - t0
+                t1 = timing.clock()
+                self.stage_seconds = t1 - t0
+                if self._obs is not None:   # tracer append is GIL-atomic:
+                    self._obs.ops_span(     # safe from this bg thread
+                        "swap stage", t0, t1, actor="swap",
+                        ok=self.error is None and self.tree is not None,
+                    )
 
         self._thread = threading.Thread(target=run, daemon=True)
         self._thread.start()
@@ -150,8 +157,9 @@ class StagedSwap:
 class SwapController:
     """Double-buffered parameter swaps against a live :class:`ServeEngine`."""
 
-    def __init__(self, engine: ServeEngine):
+    def __init__(self, engine: ServeEngine, *, obs=None):
         self.engine = engine
+        self.obs = obs if obs is not None else engine.obs
         self.last_staged: Optional[StagedSwap] = None
 
     def stage(self, *, params=None, qparams=None, plan=None,
@@ -171,7 +179,7 @@ class SwapController:
             kw = dict(n_hint=self.engine.batch)
             kw.update(prepare_kw or {})
             build = lambda: self.engine.model.prepare(qparams, plan=plan, **kw)
-        staged = StagedSwap(build)
+        staged = StagedSwap(build, obs=self.obs)
         self.last_staged = staged
         return staged
 
@@ -187,14 +195,25 @@ class SwapController:
         """
         tree = staged.wait(timeout)
         applied = threading.Event()
-        t0 = time.perf_counter()
-        self.engine.request_swap(tree, check=check, on_applied=applied.set)
+        t0 = timing.clock()
+        try:
+            self.engine.request_swap(tree, check=check, on_applied=applied.set)
+        except Exception as e:
+            if self.obs is not None:     # fingerprint/drift refusal
+                self.obs.ops_event("swap refuse", actor="swap",
+                                   error=type(e).__name__)
+            raise
         if wait and not applied.wait(timeout):
             raise TimeoutError("hot-swap staged but not applied within "
                                f"{timeout}s (engine stalled?)")
+        t1 = timing.clock()
+        if self.obs is not None:
+            self.obs.ops_span("swap flip", t0, t1, actor="swap",
+                              wave=self.engine.last_swap_wave,
+                              swaps=self.engine.swaps)
         return SwapReport(
             stage_seconds=staged.stage_seconds,
-            flip_wait_seconds=time.perf_counter() - t0,
+            flip_wait_seconds=t1 - t0,
             wave=self.engine.last_swap_wave,
             swaps=self.engine.swaps,
         )
@@ -266,7 +285,17 @@ class LiveServer:
     crash lands with that wave durable), at per-attempt wave numbering.
 
     ``clock`` is injectable (deadline shedding and the supervisor's
-    wall-clock giveup share it) for deterministic tests.
+    wall-clock giveup share it) for deterministic tests; it defaults to the
+    process-wide :func:`repro.timing.clock`, so ``timing.override_clock``
+    steers the server, the supervisor and every trace timestamp together.
+
+    ``obs`` threads a :class:`repro.obs.Observer` through the server AND
+    every engine the factory builds (engines built without their own
+    observer inherit it); restart / quarantine / shed / giveup / replay
+    land as ``ops`` events on the supervisor track.  ``trace_path`` makes
+    the server export the Perfetto trace atomically at every attempt start
+    and at completion — a kill mid-attempt leaves the previous complete
+    export, never a torn file.
     """
 
     def __init__(
@@ -281,7 +310,9 @@ class LiveServer:
         rotate_bytes: Optional[int] = None,
         queue_limit: Optional[int] = None,
         max_request_retries: Optional[int] = None,
-        clock: Callable[[], float] = time.monotonic,
+        clock: Callable[[], float] = timing.clock,
+        obs=None,
+        trace_path: Optional[str] = None,
     ):
         self.engine_factory = engine_factory
         self.log_path = str(log_path)
@@ -293,6 +324,8 @@ class LiveServer:
         self.queue_limit = queue_limit
         self.max_request_retries = max_request_retries
         self.clock = clock
+        self.obs = obs
+        self.trace_path = None if trace_path is None else str(trace_path)
         self.engine: Optional[ServeEngine] = None
         self.restarts = 0
         self.rebuilds = 0               # engine_factory invocations
@@ -306,6 +339,19 @@ class LiveServer:
         self._ident = 0
         self._pool: set = set()
         self._probe: Optional[set] = None
+
+    def _export_trace(self) -> None:
+        """Atomic Perfetto export (tmp+rename) — called at attempt starts
+        and at completion, so a kill anywhere leaves a loadable trace."""
+        if self.obs is None or self.trace_path is None:
+            return
+        from repro.obs.export import write_perfetto
+
+        write_perfetto(self.obs, self.trace_path)
+
+    def _ops(self, name: str, **args) -> None:
+        if self.obs is not None:
+            self.obs.ops_event(name, actor="supervisor", **args)
 
     # --- bounded admission queue ------------------------------------------
 
@@ -385,24 +431,33 @@ class LiveServer:
                         )
                         state.shed.add(i)
                         state.shed_reasons[i] = f"deadline {r.deadline_s}s exceeded"
+                        self._ops("shed", request=i,
+                                  deadline_s=r.deadline_s)
 
-            def body(_attempt: int):
+            def body(attempt: int):
                 state = replay_state(self.log_path)
                 shed_overdue(state)
                 pend = state.pending()
                 if self._probe is not None:
                     pend = [p for p in pend if p[0] in self._probe]
                 engine = self.engine_factory()
+                if self.obs is not None and engine.obs is None:
+                    engine.obs = self.obs     # factory-built engines inherit
                 self.engine = engine
                 self.rebuilds += 1
+                self._ops("replay", attempt=attempt, pending=len(pend),
+                          probe=sorted(self._probe) if self._probe else None)
+                # Attempt boundary: flush what we have so a kill during this
+                # attempt still leaves a complete, loadable trace on disk.
+                self._export_trace()
                 results = {i: list(t) for i, t in state.emitted.items()}
                 gmap = [idx for idx, _, _ in pend]
                 rem = {idx: b for idx, _, b in pend}
                 inflight: set = set()
 
-                def on_wave(wave, admitted, emitted):
-                    g_adm = [(gmap[i], s) for i, s in admitted]
-                    g_emit = [(gmap[i], s, toks) for i, s, toks in emitted]
+                def on_wave(rec):
+                    g_adm = [(gmap[i], s) for i, s in rec.admitted]
+                    g_emit = [(gmap[i], s, toks) for i, s, toks in rec.emitted]
                     for gi, _s in g_adm:
                         inflight.add(gi)
                     if self.injector is not None:
@@ -414,11 +469,11 @@ class LiveServer:
                         self.injector.maybe_fail_requests(
                             [gi for gi, _s, _t in g_emit]
                         )
-                    log.log_wave(wave, g_adm, g_emit)
+                    log.log_wave(rec.wave, g_adm, g_emit)
                     if self.injector is not None:
                         # After the log write: a crash here lands with this
                         # wave durable (replay resumes past it).
-                        self.injector.maybe_fail_wave(wave)
+                        self.injector.maybe_fail_wave(rec.wave)
                     for gi, _s, toks in g_emit:
                         rem[gi] -= len(toks)
                         if rem[gi] <= 0:
@@ -452,6 +507,8 @@ class LiveServer:
 
             def on_restart(attempt: int, exc: BaseException):
                 log.log_restart(attempt, repr(exc))
+                self._ops("restart", attempt=attempt,
+                          error=type(exc).__name__)
                 if self._user_on_restart is not None:
                     self._user_on_restart(attempt, exc)
 
@@ -459,6 +516,8 @@ class LiveServer:
                 # Flush the terminal verdict while the process still can:
                 # a successor server reads it from the log.
                 log.log_giveup(repr(first))
+                self._ops("giveup", error=type(first).__name__)
+                self._export_trace()
 
             result, self.restarts = supervise(
                 body, policy=policy, on_restart=on_restart,
@@ -467,6 +526,7 @@ class LiveServer:
             return result
         finally:
             log.close()
+            self._export_trace()
 
     # --- poison attribution -----------------------------------------------
 
@@ -484,6 +544,7 @@ class LiveServer:
                 log.log_quarantine(gi, reason)
                 self.quarantined[gi] = reason
                 budget_hits.append(gi)
+                self._ops("quarantine", request=gi, kind="retry_budget")
         if budget_hits:
             # The blunt path just isolated suspect(s) the identical-crash
             # chain was built on; attributing the pool's remainder would
@@ -515,6 +576,7 @@ class LiveServer:
             )
             log.log_quarantine(gi, reason)
             self.quarantined[gi] = reason
+            self._ops("quarantine", request=gi, kind="poison_attributed")
             self._probe = None
             self._pool = set()
             self._last_sig, self._ident = None, 0

@@ -68,24 +68,37 @@ pads through their state; only attention archs get exact invariance.)
   to new admissions in full and to in-flight slots from their current
   position (their KV rows were written by the old weights — standard
   serving-upgrade semantics).
-* *Wave observability*: ``ServeEngine.on_wave(wave, admitted, emitted)``
-  fires once per admission wave, after the wave's single host sync, with the
-  per-request tokens the wave produced — the durable request log's write
-  point (``repro.serve.request_log``), and where failure injection lands
-  mid-serve.
+* *Wave observability*: ``ServeEngine.on_wave`` fires once per admission
+  wave, after the wave's single host sync, with a structured
+  :class:`WaveRecord` (wave index, admitted ``(request, slot)`` pairs,
+  per-request emitted tokens, steps decoded, host-sync wall time) — the
+  durable request log's write point (``repro.serve.request_log``), and
+  where failure injection lands mid-serve.  The pre-PR-8 positional
+  signature ``on_wave(wave, admitted, emitted)`` still works through a
+  deprecation shim for one release (see :meth:`ServeEngine._dispatch_wave`).
+* *Structured observability*: ``ServeEngine(obs=...)`` threads a
+  :class:`repro.obs.Observer` through every driver.  Recording happens
+  **only at the existing host syncs** — every traced value (wave index,
+  steps, request ids, wall-clock reads) is already host-resident there, so
+  tracing adds zero device transfers: tokens, ``host_syncs`` and
+  ``admissions`` are bit-identical with ``obs`` on or off
+  (``tests/test_obs.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 import threading
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import timing
 from repro.models.model import Model
 
 Array = jax.Array
@@ -226,6 +239,58 @@ def bucket_to(n: int, floor: int) -> int:
 
 
 @dataclasses.dataclass
+class WaveRecord:
+    """What one admission wave did — the structured ``on_wave`` payload.
+
+    Every field is host-resident when the record is built (the wave's
+    single device→host sync has already happened), so consuming it —
+    logging, tracing, metrics — adds no synchronization.  Timestamps are
+    :func:`repro.timing.clock` seconds: ``t_start`` (wave boundary, before
+    admission), ``t_decode`` (decode program dispatched), ``t_fetch``
+    (host sync begins), ``t_sync`` (token matrix on host).  The chunked and
+    loop drivers emit coarse per-chunk records to ``obs`` with the same
+    shape (one chunk == one "wave").
+    """
+
+    wave: int
+    admitted: list                      # [(request_idx, slot)], this wave
+    emitted: list                       # [(request_idx, slot, tokens)]
+    finished: frozenset = frozenset()   # request idxs that completed
+    steps: int = 0                      # decode steps run this wave
+    t_start: float = 0.0
+    t_decode: float = 0.0
+    t_fetch: float = 0.0
+    t_sync: float = 0.0
+    prefill_bucket: Optional[int] = None   # bucket of this wave's admissions
+    queue_depth: int = 0                # requests still queued after admission
+    active_slots: int = 0
+
+    @property
+    def sync_s(self) -> float:
+        """Host-sync wall time: how long the host blocked on the device."""
+        return self.t_sync - self.t_fetch
+
+
+def _wave_cb_is_legacy(cb) -> bool:
+    """True when ``cb`` expects the pre-PR-8 positional signature
+    ``(wave, admitted, emitted)`` rather than one :class:`WaveRecord`.
+    Detection is by required-positional-parameter count; undecidable
+    callables (builtins, ``*args``) are treated as record-style."""
+    try:
+        sig = inspect.signature(cb)
+    except (TypeError, ValueError):
+        return False
+    required = 0
+    for p in sig.parameters.values():
+        if p.kind == p.VAR_POSITIONAL:
+            return True                 # *args almost certainly the old shape
+        if (p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+                and p.default is p.empty):
+            required += 1
+    return required >= 2
+
+
+@dataclasses.dataclass
 class Request:
     prompt: np.ndarray                  # [S] int32
     max_new_tokens: int = 16
@@ -251,6 +316,7 @@ class ServeEngine:
         decode: str = "scan",
         prompt_bucket: int = 8,
         plan=None,
+        obs=None,
     ):
         if decode not in ("scan", "chunked", "loop"):
             raise ValueError(
@@ -284,9 +350,15 @@ class ServeEngine:
         self.admissions: list[tuple[int, int]] = []   # (request_idx, slot),
                                                       # reset per generate()
                                                       # (indices are per-call)
-        # --- live-ops hooks (driven by repro.serve.ops) -------------------
-        self.on_wave = None             # callback(wave, admitted, emitted);
-                                        # emitted = [(req_idx, slot, tokens)]
+        self.bucket_counts: dict[int, int] = {}       # prefill bucket -> uses,
+                                                      # cumulative (obs gauge)
+        # --- observability + live-ops hooks -------------------------------
+        self.obs = obs                  # repro.obs.Observer or None; records
+                                        # ONLY at the existing host syncs
+        self._obs_gen = 0               # Observer generation of this call
+        self.on_wave = None             # callback(WaveRecord); the legacy
+                                        # (wave, admitted, emitted) signature
+                                        # is shimmed with a DeprecationWarning
         self.swaps = 0                  # completed hot-swaps, cumulative
         self.last_swap_wave: int | None = None
         self._swap_pending = None       # (params, on_applied) under _swap_lock
@@ -313,6 +385,10 @@ class ServeEngine:
         greedy tokens in request order."""
         self._validate(requests)
         self._serving = True
+        if self.obs is not None:
+            self._obs_gen = self.obs.serve_begin(
+                len(requests), decode=self.decode, batch=self.batch
+            )
         try:
             if self.decode == "scan":
                 return self._generate_continuous(requests)
@@ -320,9 +396,9 @@ class ServeEngine:
             for start in range(0, len(requests), self.batch):
                 chunk = requests[start : start + self.batch]
                 out.extend(
-                    self._generate_batch_chunked(chunk)
+                    self._generate_batch_chunked(chunk, start)
                     if self.decode == "chunked"
-                    else self._generate_batch_loop(chunk)
+                    else self._generate_batch_loop(chunk, start)
                 )
             return out
         finally:
@@ -330,6 +406,35 @@ class ServeEngine:
             # Batch drained: the boundary a swap requested mid-final-wave
             # (or mid-chunk in the non-continuous drivers) lands on.
             self._poll_swap()
+            if self.obs is not None:
+                self.obs.serve_end(self._obs_gen, engine=self)
+
+    def _dispatch_wave(self, rec: WaveRecord) -> None:
+        """Deliver one wave's record to ``obs`` and ``on_wave`` — after the
+        wave's host sync, BEFORE the engine's own output bookkeeping (the
+        durable-log crash-window contract).  ``obs`` records first, so a
+        crash injected through ``on_wave`` still leaves the wave traced.
+
+        Legacy shim: an ``on_wave`` written against the pre-PR-8 positional
+        signature ``(wave, admitted, emitted)`` is still called that way,
+        once-per-process warned.  The shim is scheduled for removal next
+        release — migrate to ``on_wave(record)``."""
+        if self.obs is not None:
+            self.obs.wave(rec, gen=self._obs_gen, engine=self)
+        cb = self.on_wave
+        if cb is None:
+            return
+        if _wave_cb_is_legacy(cb):
+            warnings.warn(
+                "ServeEngine.on_wave(wave, admitted, emitted) is deprecated; "
+                "accept a single serving.WaveRecord instead (its .wave, "
+                ".admitted, .emitted fields carry the old arguments). The "
+                "positional shim will be removed in the next release.",
+                DeprecationWarning, stacklevel=3,
+            )
+            cb(rec.wave, rec.admitted, rec.emitted)
+        else:
+            cb(rec)
 
     # --- live operations: double-buffered parameter hot-swap --------------
 
@@ -462,6 +567,8 @@ class ServeEngine:
             # staged hot-swap installs atomically here — new admissions
             # prefill under the new tree, carried slots continue under it.
             self._poll_swap(wave)
+            t_wave = timing.clock()     # host-side read at the boundary
+            plen_b: Optional[int] = None
             # Admission: FIFO into free slots, as many as legally share one
             # prefill extent (singletons always fit, so the queue drains).
             admitted: list[int] = []
@@ -479,6 +586,7 @@ class ServeEngine:
                 qi += 1
             if admitted:
                 plen_b = self._wave_bucket(wave_reqs)
+                self.bucket_counts[plen_b] = self.bucket_counts.get(plen_b, 0) + 1
                 toks = np.zeros((b, plen_b), np.int32)
                 npad = np.zeros((b,), np.int32)
                 amask = np.zeros((b,), bool)
@@ -510,13 +618,16 @@ class ServeEngine:
                 (slot_rem[s] for s in range(b) if slot_req[s] is not None),
                 default=0,
             )
+            t_decode = timing.clock()   # decode program dispatched (async)
             token, caches, pos, out_dev = self._decode_wave(
                 self.params, token, caches, pos, pad,
                 jnp.asarray(active), jnp.int32(steps),
             )
             # The wave's single device->host sync; steps is host-known, so
             # only the used columns cross (the slice is outside the trace).
+            t_fetch = timing.clock()
             mat = self._fetch(out_dev[:, : 1 + steps])
+            t_sync = timing.clock()
             emitted: list[tuple[int, int, list[int]]] = []
             for s in range(b):
                 i = slot_req[s]
@@ -524,14 +635,25 @@ class ServeEngine:
                     continue
                 lo = 0 if s in admitted else 1   # col 0 = wave-start token
                 emitted.append((i, s, [int(t) for t in mat[s, lo : 1 + steps]]))
-            if self.on_wave is not None:
-                # Fires after the sync but before outs/slot bookkeeping: the
-                # request log's write point.  A crash here (injected or real)
-                # lands after the wave's tokens are durable, so replay resumes
-                # *including* this wave with no duplicates.
-                self.on_wave(
-                    wave, [(slot_req[s], s) for s in admitted], emitted,
-                )
+            # Fires after the sync but before outs/slot bookkeeping: the
+            # request log's write point.  A crash here (injected or real)
+            # lands after the wave's tokens are durable, so replay resumes
+            # *including* this wave with no duplicates.  Every record field
+            # is already host-resident — building it syncs nothing.
+            self._dispatch_wave(WaveRecord(
+                wave=wave,
+                admitted=[(slot_req[s], s) for s in admitted],
+                emitted=emitted,
+                finished=frozenset(
+                    i for i, s, _t in emitted if slot_rem[s] == steps
+                ),
+                steps=steps,
+                t_start=t_wave, t_decode=t_decode,
+                t_fetch=t_fetch, t_sync=t_sync,
+                prefill_bucket=plen_b,
+                queue_depth=len(queue) - qi,
+                active_slots=int(active.sum()),
+            ))
             for i, s, toks_w in emitted:
                 outs[i].extend(toks_w)
                 slot_rem[s] -= steps
@@ -542,8 +664,10 @@ class ServeEngine:
 
     # --- chunked driver: bucketed prefill + one fused decode per chunk ----
 
-    def _generate_batch_chunked(self, chunk: list[Request]) -> list[list[int]]:
+    def _generate_batch_chunked(self, chunk: list[Request],
+                                start: int = 0) -> list[list[int]]:
         b = self.batch
+        t_wave = timing.clock()
         plen = max(len(r.prompt) for r in chunk)
         max_new = max(r.max_new_tokens for r in chunk)
         # Chunked decode runs the whole chunk to the worst-case budget, so
@@ -560,6 +684,7 @@ class ServeEngine:
         if plen + length > self.max_seq:
             length = max_new
         plen_b = min(bucket_to(plen, self.prompt_bucket), self.max_seq - length)
+        self.bucket_counts[plen_b] = self.bucket_counts.get(plen_b, 0) + 1
 
         toks, pad = self._pad_prompts(chunk, plen_b)
         caches = self.model.init_cache(b, self.max_seq, dtype=jnp.float32)
@@ -569,21 +694,42 @@ class ServeEngine:
         mn = np.ones((b,), np.int32)
         for i, r in enumerate(chunk):
             mn[i] = r.max_new_tokens
+        t_decode = timing.clock()
         ys, _ = self._decode_scan(
             self.params, logits, caches, jnp.int32(plen_b), jnp.asarray(pad),
             jnp.asarray(mn), length,
         )
+        t_fetch = timing.clock()
         mat = self._fetch(ys)            # the chunk's single device->host sync
-        return [
+        t_sync = timing.clock()
+        outs = [
             [int(t) for t in mat[i, : chunk[i].max_new_tokens]]
             for i in range(len(chunk))
         ]
+        if self.obs is not None:
+            # Coarse per-chunk record (one chunk == one "wave"): same host
+            # sync point, same zero-sync discipline as the continuous driver.
+            self.obs.wave(WaveRecord(
+                wave=start // b,
+                admitted=[(start + i, i) for i in range(len(chunk))],
+                emitted=[(start + i, i, outs[i]) for i in range(len(chunk))],
+                finished=frozenset(start + i for i in range(len(chunk))),
+                steps=length,
+                t_start=t_wave, t_decode=t_decode,
+                t_fetch=t_fetch, t_sync=t_sync,
+                prefill_bucket=plen_b, queue_depth=0,
+                active_slots=len(chunk),
+            ), gen=self._obs_gen, engine=self)
+        return outs
 
     # --- seed driver: per-token Python loop (baseline / oracle) -----------
 
-    def _generate_batch_loop(self, chunk: list[Request]) -> list[list[int]]:
+    def _generate_batch_loop(self, chunk: list[Request],
+                             start: int = 0) -> list[list[int]]:
+        t_wave = timing.clock()
         plen = max(len(r.prompt) for r in chunk)
         self._check_fits(plen, max(r.max_new_tokens for r in chunk))
+        self.bucket_counts[plen] = self.bucket_counts.get(plen, 0) + 1
         toks, pad = self._pad_prompts(chunk, plen)
         pad_dev = jnp.asarray(pad)
         caches = self.model.init_cache(self.batch, self.max_seq, dtype=jnp.float32)
@@ -607,4 +753,19 @@ class ServeEngine:
             for i, r in enumerate(chunk):
                 if len(outs[i]) < r.max_new_tokens:
                     outs[i].append(int(tok_h[i, 0]))
+        if self.obs is not None:
+            t_sync = timing.clock()
+            # The loop driver syncs every step; record one coarse per-chunk
+            # span so SLO stats stay comparable across decode modes.
+            self.obs.wave(WaveRecord(
+                wave=start // self.batch,
+                admitted=[(start + i, i) for i in range(len(chunk))],
+                emitted=[(start + i, i, outs[i]) for i in range(len(chunk))],
+                finished=frozenset(start + i for i in range(len(chunk))),
+                steps=max_new,
+                t_start=t_wave, t_decode=t_wave,
+                t_fetch=t_wave, t_sync=t_sync,
+                prefill_bucket=plen, queue_depth=0,
+                active_slots=len(chunk),
+            ), gen=self._obs_gen, engine=self)
         return outs

@@ -1,18 +1,78 @@
-"""The ONE timing methodology shared by benchmarks and the autotuner.
+"""The ONE timing methodology shared by benchmarks, serving and the tuner.
 
 ``benchmarks/common.py`` re-exports these helpers for the harness sections
 and :mod:`repro.tune.measure` imports them directly, so the functional,
 serve and tune benchmarks and the planner's micro-measurements are
-comparable by construction: monotonic clock (``time.perf_counter``),
-explicit warmup calls (compiles land there), JAX outputs blocked inside the
-timed region, median-of-k against scheduler noise.
+comparable by construction: monotonic clock, explicit warmup calls
+(compiles land there), JAX outputs blocked inside the timed region,
+median-of-k against scheduler noise.
+
+**The clock is injectable.**  :func:`clock` is the single monotonic time
+source every runtime component reads — span durations in :mod:`repro.obs`,
+hot-swap stage/flip timing in :mod:`repro.serve.ops`, supervisor backoff
+deadlines in :mod:`repro.ft.supervisor`, and the micro-benchmark helpers
+below.  Tests replace it process-wide with :func:`override_clock` (a fake
+that advances on demand), making every duration deterministic without
+threading a ``clock=`` argument through each layer; components that already
+accept an explicit ``clock=`` default to this one, so both injection
+mechanisms are the same mechanism.
 """
 
 from __future__ import annotations
 
+import contextlib
 import time
 
 import jax
+
+# The process-wide monotonic time source (seconds).  Read through clock();
+# replaced only via set_clock/override_clock.
+_CLOCK = time.perf_counter
+
+
+def clock() -> float:
+    """Current monotonic time in seconds from the injectable source."""
+    return _CLOCK()
+
+
+def set_clock(fn=None) -> None:
+    """Install ``fn`` as the process-wide monotonic clock (``None`` restores
+    the real one).  Prefer :func:`override_clock` in tests — it restores on
+    exit even when the test fails."""
+    global _CLOCK
+    _CLOCK = time.perf_counter if fn is None else fn
+
+
+@contextlib.contextmanager
+def override_clock(fn):
+    """Temporarily replace the process clock — deterministic span durations,
+    backoff timing and SLO stats in tests."""
+    global _CLOCK
+    prev = _CLOCK
+    _CLOCK = fn
+    try:
+        yield fn
+    finally:
+        _CLOCK = prev
+
+
+class FakeClock:
+    """A manually-advanced clock for tests: ``clock()`` returns ``now``;
+    ``advance(dt)`` moves time forward.  ``tick`` > 0 additionally advances
+    by that much on every read (so code that measures a span sees a
+    non-zero, exactly-predictable duration)."""
+
+    def __init__(self, start: float = 0.0, tick: float = 0.0):
+        self.now = float(start)
+        self.tick = float(tick)
+
+    def __call__(self) -> float:
+        t = self.now
+        self.now += self.tick
+        return t
+
+    def advance(self, dt: float) -> None:
+        self.now += float(dt)
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
@@ -22,10 +82,10 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
         jax.block_until_ready(out)
     times = []
     for _ in range(iters):
-        t0 = time.perf_counter()
+        t0 = clock()
         out = fn(*args)
         jax.block_until_ready(out)
-        times.append((time.perf_counter() - t0) * 1e6)
+        times.append((clock() - t0) * 1e6)
     times.sort()
     return times[len(times) // 2]
 
@@ -35,7 +95,7 @@ def timed(fn, *args, **kwargs):
     ``(result, seconds)`` with any JAX outputs blocked.  For one-shot
     measurements (cold serve passes, prepare steps) where ``time_fn``'s
     warmup would hide exactly the cost being measured."""
-    t0 = time.perf_counter()
+    t0 = clock()
     out = fn(*args, **kwargs)
     jax.block_until_ready(out)
-    return out, time.perf_counter() - t0
+    return out, clock() - t0

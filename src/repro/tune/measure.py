@@ -40,11 +40,12 @@ class Measurer:
     """Timed ``apply_linear`` per candidate, cached by candidate identity."""
 
     def __init__(self, *, iters: int = 3, warmup: int = 1,
-                 cache: Optional[dict] = None):
+                 cache: Optional[dict] = None, obs=None):
         self.iters = iters
         self.warmup = warmup
         self.cache = _GLOBAL_CACHE if cache is None else cache
-        self.hits = 0
+        self.obs = obs                  # repro.obs.Observer: per-candidate
+        self.hits = 0                   # measurement spans + hit/miss counters
         self.misses = 0
 
     def measure(self, q, x, cand: Candidate) -> float:
@@ -56,6 +57,8 @@ class Measurer:
         key = measure_key(q.f, q.k, x.shape[0], q.spec, cand)
         if key in self.cache:
             self.hits += 1
+            if self.obs is not None:
+                self.obs.measurement(key, self.cache[key], cached=True)
             return self.cache[key]
         self.misses += 1
         qq = dataclasses.replace(q, spec=cand.spec_for(q.spec))
@@ -71,6 +74,8 @@ class Measurer:
             fn = lambda xx: api.apply_linear(layer, xx)
         us = time_fn(fn, x, iters=self.iters, warmup=self.warmup)
         self.cache[key] = us
+        if self.obs is not None:
+            self.obs.measurement(key, us, cached=False)
         return us
 
 

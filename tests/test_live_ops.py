@@ -110,9 +110,9 @@ def test_mid_stream_swap_is_token_identical_and_drops_nothing():
     eng = ServeEngine(model, tree_a, batch=2, max_seq=32)
     seen = []
 
-    def on_wave(wave, admitted, emitted):
-        seen.append(wave)
-        if wave == 0:                      # request mid-stream, first wave
+    def on_wave(rec):
+        seen.append(rec.wave)
+        if rec.wave == 0:                  # request mid-stream, first wave
             eng.request_swap(tree_b)
 
     eng.on_wave = on_wave
